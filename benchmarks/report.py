@@ -1,0 +1,94 @@
+"""Generate EXPERIMENTS.md tables from results/ JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+import repro.configs as C
+
+GB = 1 << 30
+
+
+def _load(path):
+    return json.load(open(path)) if os.path.exists(path) else None
+
+
+def dryrun_table(dirname="results/dryrun"):
+    lines = [
+        "| arch | shape | mesh | params | arg B/dev | temp B/dev | "
+        "HLO flops/dev | coll B/dev | AR/AG/RS/A2A/CP | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, ok, why in C.cells():
+        for mesh in ("16x16", "2x16x16"):
+            if not ok:
+                if mesh == "16x16":
+                    lines.append(f"| {arch} | {shape.name} | — | — | — | — | "
+                                 f"— | — | skipped: {why.split(':')[0]} | — |")
+                continue
+            rec = _load(os.path.join(dirname,
+                                     f"{arch}__{shape.name}__{mesh}.json"))
+            if rec is None:
+                continue
+            m = rec["memory"]
+            cl = rec["collectives"]
+            cnt = cl["count"]
+            lines.append(
+                f"| {arch} | {shape.name} | {mesh} | "
+                f"{rec['params']/1e9:.2f}B | "
+                f"{(m['argument_bytes'] or 0)/GB:.2f}G | "
+                f"{(m['temp_bytes'] or 0)/GB:.2f}G | "
+                f"{rec['cost']['flops']:.2e} | "
+                f"{cl['total_bytes']:.2e} | "
+                f"{cnt['all-reduce']}/{cnt['all-gather']}/"
+                f"{cnt['reduce-scatter']}/{cnt['all-to-all']}/"
+                f"{cnt['collective-permute']} | "
+                f"{rec['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path="results/roofline/roofline.json"):
+    rows = _load(path)
+    if not rows:
+        return "(roofline calibration pending)"
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | what would move the bottleneck |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        hint = _bottleneck_hint(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {hint} |")
+    return "\n".join(lines)
+
+
+def _bottleneck_hint(r):
+    d = r["dominant"]
+    kind = C.SHAPES[r["shape"]].kind
+    if d == "collective":
+        return ("shard experts wider / bucket+overlap the DP all-reduce"
+                if "moe" in r["arch"] else
+                "overlap grad all-reduce with backward; reduce-scatter "
+                "instead of all-reduce")
+    if d == "memory":
+        if kind == "decode":
+            return "decode is cache-bandwidth bound (physics); grow batch " \
+                   "or quantize the KV cache"
+        return "larger microbatch per chip / fuse normalizations; " \
+               "cast activations bf16"
+    return "already compute-bound: raise MXU occupancy via larger tiles"
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### Roofline\n")
+        print(roofline_table())

@@ -1,0 +1,89 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), where
+``derived`` carries the table-specific payload (cycles, vs-paper ratio,
+normalized cost, roofline terms ...).
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --full     # + matmul-128 etc.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import paper_tables  # noqa: E402
+
+
+def emit(name, us, derived):
+    print(f"{name},{us},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    # Tables 4/5/6 — area model (no runtime: us = 0)
+    for row in paper_tables.table_area():
+        emit(f"table4_5/{row['config']}", 0,
+             f"alm={row['alms']}(paper {row['alms_paper']});"
+             f"m20k={row['m20ks']}(paper {row['m20ks_paper']});"
+             f"dsp={row['dsps']};fmax={row['fmax']}")
+    for row in paper_tables.table6_alu():
+        emit(f"table6/{row['alu'].replace(' ', '_')}", 0,
+             f"alm={row['alms']};ff={row['ffs']}")
+
+    # Table 7
+    sizes = (32, 64, 128) if args.full else (32, 64)
+    for row in paper_tables.table7(sizes):
+        emit(f"table7/{row['bench']}_{row['n']}_{row['variant']}",
+             row["time_us"],
+             f"cycles={row['cycles']};paper={row['paper_cycles']};"
+             f"x_paper={row['cycles_vs_paper']};correct={row['correct']};"
+             f"nios_speedup={row['ratio_time_vs_nios']};"
+             f"normalized={row['normalized_vs_nios']}")
+
+    # Table 8
+    sizes8 = (32, 64, 128, 256) if args.full else (32, 64)
+    for row in paper_tables.table8(sizes8):
+        emit(f"table8/{row['bench']}_{row['n']}_{row['variant']}",
+             row["time_us"],
+             f"cycles={row['cycles']};paper={row['paper_cycles']};"
+             f"x_paper={row['cycles_vs_paper']};correct={row['correct']};"
+             f"nios_speedup={row['ratio_time_vs_nios']};"
+             f"normalized={row['normalized_vs_nios']}")
+
+    # Fig. 6 profile
+    for row in paper_tables.profile_mix():
+        payload = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k.startswith("pct_"))
+        emit(f"fig6/{row['bench']}_{row['n']}", 0, payload)
+
+    # Dynamic-scalability ablation
+    for row in paper_tables.dynamic_scaling((32, 64) if not args.full
+                                            else (32, 64, 128)):
+        emit(f"dynamic_scaling/reduction_{row['n']}", 0,
+             f"tsc={row['tsc_cycles']};predicated={row['predicated_cycles']};"
+             f"speedup={row['dynamic_speedup']}x")
+
+    # Roofline (from the dry-run + calibration batches, if present)
+    rl = "results/roofline/roofline.json"
+    if os.path.exists(rl):
+        for row in json.load(open(rl)):
+            emit(f"roofline/{row['arch']}__{row['shape']}",
+                 round(max(row['t_compute_s'], row['t_memory_s'],
+                           row['t_collective_s']) * 1e6, 1),
+                 f"dom={row['dominant']};comp={row['t_compute_s']:.2e};"
+                 f"mem={row['t_memory_s']:.2e};coll={row['t_collective_s']:.2e};"
+                 f"useful={row['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

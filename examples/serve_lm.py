@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + decode with dynamic-wavefront
+request masking (ragged request lifetimes, the paper's TSC semantics at
+request granularity).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main([
+        "--arch", "qwen3-moe-30b-a3b", "--smoke",
+        "--requests", "8", "--prompt-len", "16",
+        "--max-new", "24", "--max-len", "128",
+    ])

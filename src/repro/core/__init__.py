@@ -1,0 +1,20 @@
+"""eGPU core: the paper's contribution as a composable JAX module."""
+from .config import (EGPUConfig, CostParams, table4_configs, table5_configs,
+                     benchmark_config)
+from .isa import (Op, Typ, Instr, OpClass, encode_word, decode_word, iw_bits,
+                  TSC_FULL, TSC_WF0, TSC_CPU, TSC_MCU, PERSONALITIES)
+from .assembler import Asm, ProgramImage, schedule
+from .machine import (MachineState, init_state, shared_as_f32, shared_as_u32,
+                      shared_as_i32, profile)
+from .executor import run_program
+from .area_model import resources, Resources
+from . import cost, area_model
+
+__all__ = [
+    "EGPUConfig", "CostParams", "table4_configs", "table5_configs",
+    "benchmark_config", "Op", "Typ", "Instr", "OpClass", "encode_word",
+    "decode_word", "iw_bits", "TSC_FULL", "TSC_WF0", "TSC_CPU", "TSC_MCU",
+    "PERSONALITIES", "Asm", "ProgramImage", "schedule", "MachineState",
+    "init_state", "shared_as_f32", "shared_as_u32", "shared_as_i32",
+    "profile", "run_program", "resources", "Resources", "cost", "area_model",
+]

@@ -1,0 +1,515 @@
+"""The eGPU SIMT executor: a jitted ``lax.while_loop`` interpreter.
+
+One ``while_loop`` iteration = one instruction.  All threads execute the
+instruction *vectorised* (the hardware issues one 16-lane wavefront per
+cycle; we charge cycles through the cost model rather than looping), with
+the active-thread mask derived from
+
+  * the instruction's 4-bit thread-space control field (dynamic
+    scalability, Table 3),
+  * the runtime thread count (static scalability),
+  * the per-thread predicate stacks (divergence, Fig. 2).
+
+Cycle accounting matches :mod:`repro.core.cost` exactly, and a built-in
+hazard checker counts read-after-write violations (the eGPU has no hazard
+hardware; a correct program — i.e. one produced by the assembler's
+scheduler — must report zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import isa
+from .assembler import ProgramImage
+from .config import EGPUConfig
+from .isa import Op, Typ
+from .machine import MachineState, init_state
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+# virtual hazard slots
+_HZ_MEM = -2
+_HZ_PRED = -1
+
+
+# ---------------------------------------------------------------------------
+# Constant per-opcode tables (built once per config, baked into the jaxpr).
+# ---------------------------------------------------------------------------
+
+def _tables(cfg: EGPUConfig):
+    n = isa.NUM_OPCODES
+    scalar = np.zeros((n,), np.bool_)
+    reads_ra = np.zeros((n,), np.bool_)
+    reads_rb = np.zeros((n,), np.bool_)
+    reads_rd = np.zeros((n,), np.bool_)
+    writes_rd = np.zeros((n,), np.bool_)
+    latency = np.zeros((n,), np.int32)
+    opclass = np.zeros((n,), np.int32)
+    per_wf = np.ones((n, 4), np.int32)  # [op, width_code] issue cycles per wf
+    from . import cost as _cost
+
+    for op in Op:
+        scalar[op] = op in isa.SCALAR_OPS
+        reads_ra[op] = op in isa.READS_RA
+        reads_rb[op] = op in isa.READS_RB
+        reads_rd[op] = op in isa.READS_RD
+        writes_rd[op] = op in isa.REG_WRITE_OPS
+        latency[op] = _cost.result_latency(op, cfg)
+        opclass[op] = isa.OP_CLASS[op]
+        for wc in range(4):
+            width = isa.WIDTH_LANES[wc]
+            if op == Op.LOD:
+                per_wf[op, wc] = -(-width // cfg.cost.sp_read_ports)
+            elif op == Op.STO:
+                per_wf[op, wc] = -(-width // cfg.write_ports)
+    return dict(scalar=jnp.asarray(scalar), reads_ra=jnp.asarray(reads_ra),
+                reads_rb=jnp.asarray(reads_rb), reads_rd=jnp.asarray(reads_rd),
+                writes_rd=jnp.asarray(writes_rd), latency=jnp.asarray(latency),
+                opclass=jnp.asarray(opclass), per_wf=jnp.asarray(per_wf))
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Integer helpers (bit-exact, uint32 register file)
+# ---------------------------------------------------------------------------
+
+def _i(x):
+    return x.astype(jnp.int32)
+
+
+def _u(x):
+    return x.astype(_U32)
+
+
+def _f(x):
+    return lax.bitcast_convert_type(x, jnp.float32)
+
+
+def _bits(x):
+    return lax.bitcast_convert_type(x.astype(jnp.float32), _U32)
+
+
+def _sext16(x_u32):
+    """Sign-extend the low 16 bits."""
+    x = _i(x_u32 & _U32(0xFFFF))
+    return jnp.where(x >= 1 << 15, x - (1 << 16), x)
+
+
+def _sext24(x_u32):
+    x = _i(x_u32 & _U32(0xFFFFFF))
+    return jnp.where(x >= 1 << 23, x - (1 << 24), x)
+
+
+def _bit_reverse32(x):
+    x = ((x & _U32(0x55555555)) << 1) | ((x >> 1) & _U32(0x55555555))
+    x = ((x & _U32(0x33333333)) << 2) | ((x >> 2) & _U32(0x33333333))
+    x = ((x & _U32(0x0F0F0F0F)) << 4) | ((x >> 4) & _U32(0x0F0F0F0F))
+    x = ((x & _U32(0x00FF00FF)) << 8) | ((x >> 8) & _U32(0x00FF00FF))
+    x = (x << 16) | (x >> 16)
+    return x
+
+
+def _mul24(a_u32, b_u32, signed):
+    """24x24 -> 48-bit product as (hi24, lo24) uint32 limb pair.
+
+    Implemented in 32-bit limbs (the container runs with x64 disabled,
+    and the hardware is a 24-bit multiplier anyway).
+    """
+    if signed:
+        sa = _sext24(a_u32)
+        sb = _sext24(b_u32)
+        neg = (sa < 0) ^ (sb < 0)
+        a = _u(jnp.abs(sa))
+        b = _u(jnp.abs(sb))
+    else:
+        neg = jnp.zeros(a_u32.shape, jnp.bool_)
+        a = a_u32 & _U32(0xFFFFFF)
+        b = b_u32 & _U32(0xFFFFFF)
+    m12 = _U32((1 << 12) - 1)
+    m24 = _U32((1 << 24) - 1)
+    ah, al = a >> 12, a & m12
+    bh, bl = b >> 12, b & m12
+    low = al * bl                       # < 2^24
+    mid = ah * bl + al * bh             # < 2^25
+    t = mid + (low >> 12)               # < 2^26
+    hi = ah * bh + (t >> 12)            # bits [47:24]
+    lo = ((t & m12) << 12) | (low & m12)  # bits [23:0]
+    # two's-complement negate the 48-bit (hi, lo) pair where requested
+    nlo = (-lo) & m24
+    borrow = (lo != 0).astype(_U32)
+    nhi = ((~hi) & m24) + _U32(1) - borrow
+    nhi = nhi & m24
+    hi = jnp.where(neg, nhi, hi)
+    lo = jnp.where(neg, nlo, lo)
+    return hi, lo, neg
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+_PAD = 64  # programs are padded to a multiple of this to share compiles
+
+
+@functools.lru_cache(maxsize=32)
+def _make_runner(cfg: EGPUConfig, prog_len: int):
+    T = cfg.max_threads
+    R = cfg.regs_per_thread
+    S = cfg.shared_words
+    D = max(1, cfg.predicate_levels)
+    tables = _tables(cfg)
+    tid = jnp.arange(T, dtype=_I32)
+    lane = tid % cfg.num_sps
+    wf = tid // cfg.num_sps
+    width_lanes = jnp.asarray(isa.WIDTH_LANES, _I32)
+
+    def body(carry):
+        st: MachineState = carry[0]
+        prog = carry[1]
+        pc = st.pc
+        op = prog["op"][pc]
+        typ = prog["typ"][pc]
+        rd = prog["rd"][pc]
+        ra = prog["ra"][pc]
+        rb = prog["rb"][pc]
+        imm = prog["imm"][pc]
+        tsc = prog["tsc"][pc]
+
+        width_code = (tsc >> 2) & 3
+        depth_code = tsc & 3
+        w_rt = _cdiv(st.threads_active, cfg.num_sps)
+        wfs = jnp.stack([_I32(1), w_rt, jnp.maximum(1, _cdiv(w_rt, 2)),
+                         jnp.maximum(1, _cdiv(w_rt, 4))])[depth_code]
+        lanes = width_lanes[width_code]
+        per_wf_c = tables["per_wf"][op, width_code]
+        is_scalar = tables["scalar"][op]
+        issue = jnp.where(is_scalar, _I32(1), per_wf_c * wfs)
+
+        # --- active masks ------------------------------------------------
+        tsc_mask = (lane < lanes) & (wf < wfs) & (tid < st.threads_active)
+        lvl = jnp.arange(D, dtype=_I32)
+        pred_ok = jnp.all(st.pstack | (lvl[None, :] >= st.pdepth[:, None]),
+                          axis=1)
+        mask = tsc_mask & pred_ok
+
+        # --- operand reads --------------------------------------------------
+        rav = lax.dynamic_index_in_dim(st.regs, ra, axis=1, keepdims=False)
+        rbv = lax.dynamic_index_in_dim(st.regs, rb, axis=1, keepdims=False)
+        rdv = lax.dynamic_index_in_dim(st.regs, rd, axis=1, keepdims=False)
+
+        # --- hazard checker (RAW) ---------------------------------------
+        def constraint(row):
+            p_start, p_per_wf, p_wfs, p_lat = row[0], row[1], row[2], row[3]
+            k_max = jnp.minimum(p_wfs, wfs) - 1
+            k = jnp.where(p_per_wf > per_wf_c, k_max, 0)
+            return p_start + p_per_wf * (k + 1) - 1 + p_lat - per_wf_c * k
+
+        hz = st.hazard
+        neg_inf = _I32(-(1 << 30))
+        need = neg_inf
+        need = jnp.maximum(need, jnp.where(tables["reads_ra"][op],
+                                           constraint(hz[ra]), neg_inf))
+        need = jnp.maximum(need, jnp.where(tables["reads_rb"][op],
+                                           constraint(hz[rb]), neg_inf))
+        need = jnp.maximum(need, jnp.where(tables["reads_rd"][op],
+                                           constraint(hz[rd]), neg_inf))
+        need = jnp.maximum(need, jnp.where(op == Op.LOD,
+                                           constraint(hz[_HZ_MEM]), neg_inf))
+        if cfg.has_predicates:
+            need = jnp.maximum(
+                need, jnp.where(~is_scalar, constraint(hz[_HZ_PRED]), neg_inf))
+        violated = (~is_scalar | (op == Op.LOD)) & (need > st.cycles)
+
+        new_row = jnp.stack([st.cycles, per_wf_c, wfs, tables["latency"][op]])
+        hz = jnp.where(tables["writes_rd"][op],
+                       hz.at[rd].set(new_row), hz)
+        hz = jnp.where(op == Op.STO, hz.at[_HZ_MEM].set(new_row), hz)
+        hz = jnp.where(op >= Op.IF_EQ, hz.at[_HZ_PRED].set(new_row), hz)
+
+        # --- semantic helpers ---------------------------------------------
+        alu_mask = _U32((1 << cfg.alu_bits) - 1 if cfg.alu_bits < 32
+                        else 0xFFFFFFFF)
+
+        def wr(st_, val, m=None):
+            m = mask if m is None else m
+            val = val.astype(_U32)
+            if cfg.alu_bits < 32:
+                pass  # masking applied by int ops individually
+            old = lax.dynamic_index_in_dim(st_.regs, rd, axis=1,
+                                           keepdims=False)
+            col = jnp.where(m, val, old)
+            return st_._replace(regs=lax.dynamic_update_slice(
+                st_.regs, col[:, None], (jnp.int32(0), rd)))
+
+        def imask(v):  # integer ALU precision (16-bit ALU configs)
+            return v.astype(_U32) & alu_mask
+
+        def adv(st_):
+            return st_._replace(pc=st_.pc + 1)
+
+        signed = typ == Typ.I32
+
+        # --- branch functions (one per opcode) -----------------------------
+        def b_alu(f):
+            def g(st_):
+                return adv(wr(st_, f()))
+            return g
+
+        def shift_amt():
+            return rbv & _U32(cfg.alu_bits - 1 if cfg.shift_bits > 1 else 1)
+
+        def f_add(): return imask(rav + rbv)
+        def f_sub(): return imask(rav - rbv)
+        def f_negi(): return imask(_u(-_i(rav)))
+        def f_absi(): return imask(_u(jnp.abs(_i(rav))))
+
+        def f_mul16lo():
+            p_s = _sext16(rav) * _sext16(rbv)
+            p_u = _i((rav & _U32(0xFFFF)) * (rbv & _U32(0xFFFF)))
+            return imask(_u(jnp.where(signed, p_s, p_u)))
+
+        def f_mul16hi():
+            p_s = (_sext16(rav) * _sext16(rbv)) >> 16
+            p_u = _u((rav & _U32(0xFFFF)) * (rbv & _U32(0xFFFF))) >> 16
+            return imask(jnp.where(signed, _u(p_s), p_u))
+
+        def f_mul24lo():
+            hi, lo, _ = _mul24(rav, rbv, False)
+            hi_s, lo_s, _ = _mul24(rav, rbv, True)
+            # low 32 bits of the 48-bit product
+            u = (lo | (hi << 24))
+            s = (lo_s | (hi_s << 24))
+            return imask(jnp.where(signed, s, u))
+
+        def f_mul24hi():
+            hi, lo, _ = _mul24(rav, rbv, False)
+            hi_s, lo_s, neg = _mul24(rav, rbv, True)
+            # arithmetic >>24 of the 48-bit product: extend from bit 47
+            # (== bit 23 of hi24) — NOT from the sign flag, which is also
+            # set for zero products of opposite-signed operands
+            s = jnp.where((hi_s & _U32(0x800000)) != 0,
+                          hi_s | _U32(0xFF000000), hi_s)
+            return imask(jnp.where(signed, s, hi))
+
+        def f_and(): return imask(rav & rbv)
+        def f_or(): return imask(rav | rbv)
+        def f_xor(): return imask(rav ^ rbv)
+        def f_not(): return imask(~rav)
+        def f_cnot(): return imask(jnp.where(rav == 0, _U32(1), _U32(0)))
+        def f_bvs(): return imask(_bit_reverse32(rav))
+
+        def f_shl(): return imask(rav << shift_amt())
+
+        def f_shr():
+            log = rav >> shift_amt()
+            ari = _u(_i(rav) >> _i(shift_amt()))
+            return imask(jnp.where(signed, ari, log))
+
+        def f_pop(): return imask(lax.population_count(rav))
+
+        def f_max():
+            s = jnp.where(_i(rav) > _i(rbv), rav, rbv)
+            u = jnp.where(rav > rbv, rav, rbv)
+            return imask(jnp.where(signed, s, u))
+
+        def f_min():
+            s = jnp.where(_i(rav) < _i(rbv), rav, rbv)
+            u = jnp.where(rav < rbv, rav, rbv)
+            return imask(jnp.where(signed, s, u))
+
+        # FP (bitcast through the uint32 register file)
+        def f_fadd(): return _bits(_f(rav) + _f(rbv))
+        def f_fsub(): return _bits(_f(rav) - _f(rbv))
+        def f_fneg(): return rav ^ _U32(0x80000000)
+        def f_fabs(): return rav & _U32(0x7FFFFFFF)
+        def f_fmul(): return _bits(_f(rav) * _f(rbv))
+        def f_fmax(): return _bits(jnp.maximum(_f(rav), _f(rbv)))
+        def f_fmin(): return _bits(jnp.minimum(_f(rav), _f(rbv)))
+
+        # memory
+        def b_lod(st_):
+            addr = _i(rav) + imm
+            safe = jnp.clip(addr, 0, S - 1)
+            vals = st_.shared[safe]
+            return adv(wr(st_, vals))
+
+        def b_sto(st_):
+            addr = _i(rav) + imm
+            ok = mask & (addr >= 0) & (addr < S)
+            idx = jnp.where(ok, addr, S)  # out-of-range -> dropped
+            shared = st_.shared.at[idx].set(rdv, mode="drop")
+            return adv(st_._replace(shared=shared))
+
+        def b_lodi(st_):
+            return adv(wr(st_, jnp.broadcast_to(_u(imm), (T,))))
+
+        def b_tdx(st_):
+            return adv(wr(st_, _u(tid % st_.tdx_dim)))
+
+        def b_tdy(st_):
+            return adv(wr(st_, _u(tid // st_.tdx_dim)))
+
+        # extension units: result lands in thread 0's Rd
+        def _scalar_wr(st_, value_f32):
+            m0 = tid == 0
+            return adv(wr(st_, jnp.broadcast_to(_bits(value_f32), (T,)), m0))
+
+        def b_dot(st_):
+            s = jnp.sum(jnp.where(mask, _f(rav) * _f(rbv), 0.0))
+            return _scalar_wr(st_, s)
+
+        def b_sum(st_):
+            s = jnp.sum(jnp.where(mask, _f(rav), 0.0))
+            return _scalar_wr(st_, s)
+
+        def b_invsqr(st_):
+            return adv(wr(st_, _bits(lax.rsqrt(_f(rav)))))
+
+        # control
+        def b_jmp(st_): return st_._replace(pc=imm)
+
+        def b_jsr(st_):
+            cs = st_.cstack.at[st_.csp].set(st_.pc + 1, mode="drop")
+            return st_._replace(cstack=cs, csp=st_.csp + 1, pc=imm)
+
+        def b_rts(st_):
+            sp = st_.csp - 1
+            return st_._replace(csp=sp, pc=st_.cstack[sp])
+
+        def b_init(st_):
+            lc = st_.lctr.at[st_.lsp].set(imm, mode="drop")
+            return st_._replace(lctr=lc, lsp=st_.lsp + 1, pc=st_.pc + 1)
+
+        def b_loop(st_):
+            sp = st_.lsp - 1
+            c = st_.lctr[sp]
+            taken = c > 0
+            lc = st_.lctr.at[sp].set(c - 1)
+            return st_._replace(
+                lctr=lc,
+                lsp=jnp.where(taken, st_.lsp, sp),
+                pc=jnp.where(taken, _I32(imm), st_.pc + 1))
+
+        def b_stop(st_):
+            return st_._replace(halted=jnp.bool_(True), pc=st_.pc + 1)
+
+        def b_nop(st_): return adv(st_)
+
+        # predicates
+        def _push(st_, cond):
+            oh = (lvl[None, :] == st_.pdepth[:, None]) & tsc_mask[:, None]
+            ps = jnp.where(oh, cond[:, None], st_.pstack)
+            pd = st_.pdepth + jnp.where(tsc_mask & (st_.pdepth < D), 1, 0)
+            return adv(st_._replace(pstack=ps, pdepth=pd))
+
+        def b_if(cond_fn):
+            def g(st_):
+                return _push(st_, cond_fn())
+            return g
+
+        def c_int(cmp_s, cmp_u):
+            return jnp.where(signed, cmp_s(_i(rav), _i(rbv)),
+                             cmp_u(rav, rbv))
+
+        def b_else(st_):
+            oh = (lvl[None, :] == (st_.pdepth[:, None] - 1)) \
+                & tsc_mask[:, None] & (st_.pdepth[:, None] > 0)
+            return adv(st_._replace(pstack=st_.pstack ^ oh))
+
+        def b_endif(st_):
+            pd = st_.pdepth - jnp.where(tsc_mask & (st_.pdepth > 0), 1, 0)
+            return adv(st_._replace(pdepth=pd))
+
+        fa, fb = _f(rav), _f(rbv)
+        branches = [
+            b_alu(f_add), b_alu(f_sub), b_alu(f_negi), b_alu(f_absi),
+            b_alu(f_mul16lo), b_alu(f_mul16hi), b_alu(f_mul24lo),
+            b_alu(f_mul24hi),
+            b_alu(f_and), b_alu(f_or), b_alu(f_xor), b_alu(f_not),
+            b_alu(f_cnot), b_alu(f_bvs),
+            b_alu(f_shl), b_alu(f_shr),
+            b_alu(f_pop), b_alu(f_max), b_alu(f_min),
+            b_alu(f_fadd), b_alu(f_fsub), b_alu(f_fneg), b_alu(f_fabs),
+            b_alu(f_fmul), b_alu(f_fmax), b_alu(f_fmin),
+            b_lod, b_sto, b_lodi, b_tdx, b_tdy,
+            b_dot, b_sum, b_invsqr,
+            b_jmp, b_jsr, b_rts, b_loop, b_init, b_stop, b_nop,
+            b_if(lambda: rav == rbv),                       # IF_EQ
+            b_if(lambda: rav != rbv),                       # IF_NE
+            b_if(lambda: _i(rav) < _i(rbv)),                # IF_LT
+            b_if(lambda: rav < rbv),                        # IF_LO
+            b_if(lambda: _i(rav) <= _i(rbv)),               # IF_LE
+            b_if(lambda: rav <= rbv),                       # IF_LS
+            b_if(lambda: _i(rav) > _i(rbv)),                # IF_GT
+            b_if(lambda: rav > rbv),                        # IF_HI
+            b_if(lambda: _i(rav) >= _i(rbv)),               # IF_GE
+            b_if(lambda: rav >= rbv),                       # IF_HS
+            b_if(lambda: fa == fb),                         # IF_FEQ
+            b_if(lambda: fa != fb),                         # IF_FNE
+            b_if(lambda: fa < fb),                          # IF_FLT
+            b_if(lambda: fa <= fb),                         # IF_FLE
+            b_if(lambda: fa > fb),                          # IF_FGT
+            b_if(lambda: fa >= fb),                         # IF_FGE
+            b_if(lambda: rav == 0),                         # IF_Z
+            b_if(lambda: rav != 0),                         # IF_NZ
+            b_else, b_endif,
+        ]
+        assert len(branches) == isa.NUM_OPCODES
+
+        st2 = lax.switch(op, branches, st)
+        cls = tables["opclass"][op]
+        st2 = st2._replace(
+            cycles=st.cycles + issue,
+            steps=st.steps + 1,
+            hazard=hz,
+            hazard_violations=st.hazard_violations + violated.astype(_I32),
+            stat_cycles=st.stat_cycles.at[cls].add(issue),
+            stat_instrs=st.stat_instrs.at[cls].add(1),
+        )
+        return (st2, prog)
+
+    def cond(carry):
+        st = carry[0]
+        return (~st.halted) & (st.steps < cfg.max_steps) & \
+            (st.pc >= 0) & (st.pc < prog_len)
+
+    @jax.jit
+    def run(prog, st):
+        final, _ = lax.while_loop(cond, body, (st, prog))
+        return final
+
+    return run
+
+
+def run_program(image: ProgramImage, state: MachineState | None = None,
+                **init_kw) -> MachineState:
+    """Execute an assembled program to completion."""
+    cfg = image.cfg
+    if state is None:
+        state = init_state(cfg, threads=image.threads_active, **init_kw)
+    n = image.n
+    pad = (-n) % _PAD
+    stop_row = np.full((pad,), int(Op.STOP), np.int32)
+    zeros = np.zeros((pad,), np.int32)
+    prog = {
+        "op": jnp.asarray(np.concatenate([image.op, stop_row])),
+        "typ": jnp.asarray(np.concatenate([image.typ, zeros])),
+        "rd": jnp.asarray(np.concatenate([image.rd, zeros])),
+        "ra": jnp.asarray(np.concatenate([image.ra, zeros])),
+        "rb": jnp.asarray(np.concatenate([image.rb, zeros])),
+        "imm": jnp.asarray(np.concatenate([image.imm, zeros])),
+        "tsc": jnp.asarray(np.concatenate([image.tsc, zeros])),
+    }
+    runner = _make_runner(cfg, n + pad)
+    out = runner(prog, state)
+    out.cycles.block_until_ready()
+    return out

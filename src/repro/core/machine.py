@@ -1,0 +1,111 @@
+"""eGPU architectural state as a JAX pytree, plus host-side helpers."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .config import EGPUConfig
+
+
+class MachineState(NamedTuple):
+    """Every architectural structure of the eGPU, as arrays.
+
+    The register file is ``uint32`` — FP32 values live in registers as raw
+    bits (bitcast in/out of the FP units), exactly like the hardware, so
+    integer/FP aliasing behaves faithfully.
+    """
+
+    regs: jnp.ndarray          # (T, R) uint32 — thread register files
+    shared: jnp.ndarray        # (S,)  uint32 — shared memory
+    pstack: jnp.ndarray        # (T, D) bool — per-thread predicate stacks
+    pdepth: jnp.ndarray        # (T,)  int32 — predicate nesting depth
+    lctr: jnp.ndarray          # (LD,) int32 — loop-counter stack
+    lsp: jnp.ndarray           # ()    int32
+    cstack: jnp.ndarray        # (CD,) int32 — subroutine return stack
+    csp: jnp.ndarray           # ()    int32
+    pc: jnp.ndarray            # ()    int32
+    cycles: jnp.ndarray        # ()    int32 — the benchmark metric
+    steps: jnp.ndarray         # ()    int32 — instructions executed
+    halted: jnp.ndarray        # ()    bool
+    threads_active: jnp.ndarray  # () int32 — runtime thread count
+    tdx_dim: jnp.ndarray       # ()    int32 — TDX/TDY grid x-dimension
+    stat_cycles: jnp.ndarray   # (NUM_OP_CLASSES,) int32 — Fig. 6 profile
+    stat_instrs: jnp.ndarray   # (NUM_OP_CLASSES,) int32
+    # hazard-checker bookkeeping (not architectural): one row per register
+    # plus two virtual slots (shared-memory, predicate state); columns are
+    # (issue_start, per_wf, wavefronts, latency) of the last writer.
+    hazard: jnp.ndarray        # (R+2, 4) int32
+    hazard_violations: jnp.ndarray  # () int32
+
+
+def init_state(cfg: EGPUConfig, *, threads: int | None = None,
+               tdx_dim: int = 16,
+               shared_init: np.ndarray | None = None) -> MachineState:
+    threads = threads or cfg.max_threads
+    if threads > cfg.max_threads or threads % cfg.num_sps:
+        raise ValueError(
+            f"runtime threads {threads} invalid for max {cfg.max_threads}")
+    T, R, S = cfg.max_threads, cfg.regs_per_thread, cfg.shared_words
+    D = max(1, cfg.predicate_levels)
+    shared = jnp.zeros((S,), jnp.uint32)
+    if shared_init is not None:
+        buf = np.asarray(shared_init)
+        if buf.dtype.kind == "f":
+            buf = buf.astype(np.float32).view(np.uint32)
+        buf = buf.astype(np.uint32).ravel()
+        if buf.size > S:
+            raise ValueError(f"shared_init ({buf.size} words) exceeds {S}")
+        shared = shared.at[: buf.size].set(jnp.asarray(buf))
+    hz = np.zeros((R + 2, 4), np.int32)
+    hz[:, 0] = -(1 << 30)  # "written long ago"
+    hz[:, 1] = 1
+    hz[:, 2] = 1
+    return MachineState(
+        regs=jnp.zeros((T, R), jnp.uint32),
+        shared=shared,
+        pstack=jnp.zeros((T, D), jnp.bool_),
+        pdepth=jnp.zeros((T,), jnp.int32),
+        lctr=jnp.zeros((cfg.max_loop_depth,), jnp.int32),
+        lsp=jnp.int32(0),
+        cstack=jnp.zeros((cfg.max_call_depth,), jnp.int32),
+        csp=jnp.int32(0),
+        pc=jnp.int32(0),
+        cycles=jnp.int32(0),
+        steps=jnp.int32(0),
+        halted=jnp.bool_(False),
+        threads_active=jnp.int32(threads),
+        tdx_dim=jnp.int32(tdx_dim),
+        stat_cycles=jnp.zeros((isa.NUM_OP_CLASSES,), jnp.int32),
+        stat_instrs=jnp.zeros((isa.NUM_OP_CLASSES,), jnp.int32),
+        hazard=jnp.asarray(hz),
+        hazard_violations=jnp.int32(0),
+    )
+
+
+# --- host-side views -------------------------------------------------------
+
+def shared_as_f32(state: MachineState) -> np.ndarray:
+    return np.asarray(state.shared).view(np.float32)
+
+
+def shared_as_u32(state: MachineState) -> np.ndarray:
+    return np.asarray(state.shared)
+
+
+def shared_as_i32(state: MachineState) -> np.ndarray:
+    return np.asarray(state.shared).view(np.int32)
+
+
+def regs_as_f32(state: MachineState) -> np.ndarray:
+    return np.asarray(state.regs).view(np.float32)
+
+
+def profile(state: MachineState) -> dict[str, tuple[int, int]]:
+    """Instruction-mix profile (cycles, instructions) per class — Fig. 6."""
+    out = {}
+    for c in isa.OpClass:
+        out[c.name] = (int(state.stat_cycles[c]), int(state.stat_instrs[c]))
+    return out

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels.
+
+Each kernel adapts the paper's *dynamic thread-space* insight to the TPU:
+the grid of VMEM tiles plays the role of the eGPU's SP x wavefront array,
+and a scalar-prefetched activity bitmap plays the role of the 4-bit TSC
+instruction field — `pl.when` skips whole tiles with zero dead time,
+exactly as the eGPU skips wavefronts.
+
+Layout per kernel: ``<name>/kernel.py`` (pl.pallas_call + BlockSpec),
+``<name>/ops.py`` (jit'd public wrapper with backend dispatch),
+``<name>/ref.py`` (pure-jnp oracle used for tests and for CPU lowering).
+"""

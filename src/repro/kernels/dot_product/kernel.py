@@ -1,0 +1,61 @@
+"""The eGPU dot-product extension core as a Pallas TPU kernel.
+
+The eGPU's DOT folds <Ra, Rb> over the active thread space in one issue;
+on TPU we stream (TILE_T, L) tiles through VMEM, accumulate in a (1, 1)
+VMEM scratch across sequential grid steps, and skip TSC-inactive tiles
+with `pl.when` (skipped tiles cost neither FLOPs nor accumulator
+traffic — the "subset read" analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_T = 8
+
+
+def _kernel(active_ref, a_ref, b_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(active_ref[i] != 0)
+    def _accum():
+        a = a_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        acc_ref[0, 0] += jnp.sum(a * b)
+
+    @pl.when(i == n - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot_product(a: jnp.ndarray, b: jnp.ndarray, active: jnp.ndarray,
+                interpret: bool = False) -> jnp.ndarray:
+    t, lanes = a.shape
+    assert t % TILE_T == 0
+    grid = (t // TILE_T,)
+    spec = pl.BlockSpec((TILE_T, lanes), lambda i, act: (i, 0),
+                        memory_space=pltpu.VMEM)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=pl.BlockSpec((1, 1), lambda i, act: (0, 0),
+                                   memory_space=pltpu.VMEM),
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(active.astype(jnp.int32), a, b)
+    return out[0, 0]

@@ -1,0 +1,19 @@
+"""Public wrapper for the DOT extension kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+TILE_T = _kernel.TILE_T
+
+
+def dot_product(a, b, active, backend: str | None = None) -> jnp.ndarray:
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return _kernel.dot_product(a, b, active)
+    if backend == "interpret":
+        return _kernel.dot_product(a, b, active, interpret=True)
+    return _ref.dot_product_ref(a, b, active, tile=TILE_T)

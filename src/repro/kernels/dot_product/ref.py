@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the DOT extension unit."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dot_product_ref(a: jnp.ndarray, b: jnp.ndarray,
+                    active: jnp.ndarray, tile: int = 8) -> jnp.ndarray:
+    """<a, b> over the active thread space (eGPU DOT): (T, L) -> scalar."""
+    t = a.shape[0]
+    mask = jnp.repeat(active.astype(bool), tile, total_repeat_length=t)
+    prod = (a.astype(jnp.float32) * b.astype(jnp.float32))
+    return jnp.sum(jnp.where(mask[:, None], prod, 0.0))

@@ -1,0 +1,19 @@
+"""Public wrapper for flash attention with KV-tile skipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def flash_attention(q, k, v, lengths=None, causal: bool = True,
+                    backend: str | None = None, **kw) -> jnp.ndarray:
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return _kernel.flash_attention(q, k, v, lengths, causal, **kw)
+    if backend == "interpret":
+        return _kernel.flash_attention(q, k, v, lengths, causal,
+                                       interpret=True, **kw)
+    return _ref.mha_ref(q, k, v, lengths, causal).astype(q.dtype)

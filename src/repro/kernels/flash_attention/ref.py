@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for blocked causal/ragged attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            lengths: jnp.ndarray | None = None,
+            causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, Sq, D), k/v: (B, H, Sk, D), lengths: (B,) valid kv length.
+
+    Returns (B, H, Sq, D) float32.  Causal alignment is decode-style:
+    query i attends to kv positions <= i + (Sk - Sq).
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d)
+    sq, sk = q.shape[2], k.shape[2]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        offs = sk - sq
+        mask = (jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None] + offs)
+    mask = jnp.broadcast_to(mask[None, None], logits.shape)
+    if lengths is not None:
+        lmask = jnp.arange(sk)[None, None, None, :] < lengths[:, None, None, None]
+        mask = mask & lmask
+    logits = jnp.where(mask, logits, -1e30)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w / denom, v)

@@ -1,0 +1,68 @@
+"""Wavefront ALU execute stage as a Pallas TPU kernel.
+
+The eGPU issues one 16-lane wavefront per cycle and the TSC field drops
+inactive wavefronts from the issue schedule.  On TPU the natural
+"wavefront" is a VMEM tile aligned to the VPU (8, 128) vector registers;
+the activity bitmap arrives via scalar prefetch (it is known before the
+grid runs, like the TSC field is known at decode) and `pl.when` skips the
+tile's compute entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: sublane tile (threads) — one "wavefront block"; lanes are fixed at 128.
+TILE_T = 8
+
+
+def _kernel(active_ref, a_ref, b_ref, init_ref, o_ref, *, op: str):
+    i = pl.program_id(0)
+    is_active = active_ref[i] != 0
+
+    @pl.when(is_active)
+    def _compute():
+        a = a_ref[...]
+        b = b_ref[...]
+        if op == "add":
+            r = a + b
+        elif op == "sub":
+            r = a - b
+        elif op == "mul":
+            r = a * b
+        elif op == "max":
+            r = jnp.maximum(a, b)
+        else:
+            r = jnp.minimum(a, b)
+        o_ref[...] = r
+
+    @pl.when(jnp.logical_not(is_active))
+    def _skip():
+        # inactive wavefront: registers unchanged (eGPU write_enable = 0)
+        o_ref[...] = init_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def wavefront_alu(a: jnp.ndarray, b: jnp.ndarray, init: jnp.ndarray,
+                  active: jnp.ndarray, op: str = "add",
+                  interpret: bool = False) -> jnp.ndarray:
+    t, lanes = a.shape
+    assert t % TILE_T == 0, "thread space must tile by the wavefront block"
+    grid = (t // TILE_T,)
+    spec = pl.BlockSpec((TILE_T, lanes), lambda i, act: (i, 0),
+                        memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, lanes), a.dtype),
+        interpret=interpret,
+    )(active.astype(jnp.int32), a, b, init)

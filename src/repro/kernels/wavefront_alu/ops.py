@@ -1,0 +1,23 @@
+"""Public wrapper: dispatches to the Pallas kernel on TPU, the jnp
+reference elsewhere (the reference produces the HLO the CPU dry-run
+analyses; the kernel is the TPU artifact, validated in interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+TILE_T = _kernel.TILE_T
+
+
+def wavefront_alu(a, b, init, active, op: str = "add",
+                  backend: str | None = None) -> jnp.ndarray:
+    """Masked wavefront ALU op.  ``active``: (T // TILE_T,) tile bitmap."""
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return _kernel.wavefront_alu(a, b, init, active, op)
+    if backend == "interpret":
+        return _kernel.wavefront_alu(a, b, init, active, op, interpret=True)
+    return _ref.wavefront_alu_ref(a, b, init, active, op, tile=TILE_T)

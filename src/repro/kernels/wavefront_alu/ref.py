@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the wavefront ALU."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+OPS = ("add", "sub", "mul", "max", "min")
+
+
+def wavefront_alu_ref(a: jnp.ndarray, b: jnp.ndarray, init: jnp.ndarray,
+                      active: jnp.ndarray, op: str,
+                      tile: int = 8) -> jnp.ndarray:
+    """Execute ``op`` over the thread space; tiles with ``active==0`` keep
+    ``init`` (the eGPU semantics: a TSC-disabled wavefront's registers are
+    untouched).
+
+    a, b, init: (T, L) float32; active: (T // tile,) int32/bool.
+    """
+    f = {"add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+         "max": jnp.maximum, "min": jnp.minimum}[op]
+    out = f(a, b)
+    t = a.shape[0]
+    mask = jnp.repeat(active.astype(bool), tile, total_repeat_length=t)
+    return jnp.where(mask[:, None], out, init)

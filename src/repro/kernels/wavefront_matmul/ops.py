@@ -1,0 +1,20 @@
+"""Public wrapper for the dynamically-masked matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+TILE_M = _kernel.TILE_M
+
+
+def wavefront_matmul(a, b, row_active, backend: str | None = None
+                     ) -> jnp.ndarray:
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return _kernel.wavefront_matmul(a, b, row_active)
+    if backend == "interpret":
+        return _kernel.wavefront_matmul(a, b, row_active, interpret=True)
+    return _ref.wavefront_matmul_ref(a, b, row_active, tile_m=TILE_M)

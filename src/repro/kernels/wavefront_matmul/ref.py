@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the dynamically-masked block matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wavefront_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                         row_active: jnp.ndarray,
+                         tile_m: int = 128) -> jnp.ndarray:
+    """C = A @ B with whole row-tiles of A/C dynamically disabled.
+
+    a: (M, K), b: (K, N), row_active: (M // tile_m,).  Inactive row tiles
+    produce zeros (they were never issued — the eGPU wavefront-depth
+    subsetting along M, e.g. tokens-per-expert in MoE dispatch).
+    """
+    m = a.shape[0]
+    mask = jnp.repeat(row_active.astype(bool), tile_m, total_repeat_length=m)
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return jnp.where(mask[:, None], c, 0.0)

@@ -1,0 +1,204 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell on 512 placeholder host devices, and extract the roofline terms.
+
+The ``os.environ`` assignment below MUST stay ahead of any other import —
+jax locks the device count at first init, and only the dry-run may see
+512 devices (smoke tests and benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Per cell, emits JSON with:
+  * compiled.memory_analysis()  — bytes/device proof-of-fit,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), which cost_analysis does not report.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from . import mesh as mesh_mod
+from . import specs as specs_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b("
+    + "|".join(_COLLECTIVES) + r")\b")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in (optimized) HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f"{c}-start(" in line or f"{c}-done(" in line:
+                m = c
+                break
+        if m is None:
+            continue
+        if f"{m}-done(" in line:
+            continue  # avoid double counting start/done pairs
+        lhs = line.split("=", 1)[0] + "= " + line.split("=", 1)[1]
+        shapes = _TUPLE_RE.findall(line.split(f" {m}")[0])
+        total = sum(_nbytes(d, dims) for d, dims in shapes)
+        out[m] += total
+        count[m] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             fsdp: bool = True, seq_shard: bool = True,
+             remat: bool | None = None, extra_tag: str = "",
+             pin_out: bool = False, cache_axis: str = "seq",
+             microbatches: int = 1) -> dict:
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_mod.mesh_chips(mesh)
+    t0 = time.time()
+    cell = specs_mod.build_cell(arch, shape_name, mesh, fsdp=fsdp,
+                                seq_shard=seq_shard, remat=remat,
+                                pin_out=pin_out, cache_axis=cache_axis,
+                                microbatches=microbatches)
+    with mesh:
+        kw = {}
+        if cell.out_shardings is not None:
+            kw["out_shardings"] = cell.out_shardings
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums, **kw)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": cell.shape.kind,
+        "params": cell.model_params_bytes,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "tag": extra_tag,
+    }
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {"flops": ca.get("flops"),
+                       "bytes_accessed": ca.get("bytes accessed"),
+                       "transcendentals": ca.get("transcendentals")}
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+    try:
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--remat", choices=["on", "off"], default=None)
+    ap.add_argument("--pin-out", action="store_true")
+    ap.add_argument("--cache-axis", choices=["seq", "heads"], default="seq")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    if args.all:
+        cells = [(a, s.name) for a, s, ok, _ in configs.cells() if ok]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    remat = None if args.remat is None else args.remat == "on"
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            fname = os.path.join(args.out, tag + ".json")
+            if os.path.exists(fname):
+                print(f"SKIP {tag} (cached)")
+                continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               fsdp=not args.no_fsdp,
+                               seq_shard=not args.no_seq_shard,
+                               remat=remat, extra_tag=args.tag,
+                               pin_out=args.pin_out,
+                               cache_axis=args.cache_axis,
+                               microbatches=args.microbatches)
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+                c = rec.get("cost", {})
+                m = rec.get("memory", {})
+                print(f"OK   {tag}: flops={c.get('flops'):.3e} "
+                      f"coll={rec['collectives']['total_bytes']:.3e}B "
+                      f"temp={m.get('temp_bytes')} "
+                      f"({rec['lower_s']}s/{rec['compile_s']}s)")
+            except Exception as e:
+                n_fail += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import, and everything else must see the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+#: TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)

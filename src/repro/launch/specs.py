@@ -1,0 +1,151 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``build_cell`` returns everything the dry-run needs: the step function,
+abstract arguments, and matching in_shardings — with no device
+allocation anywhere (eval_shape end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..models import api, vlm
+from ..models.common import ModelConfig
+from ..sharding import partition
+from ..training import optimizer as opt_mod, steps
+
+ENC_LEN = 4096       # encoder frames for enc-dec decode cells
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: configs.ShapeSpec
+    cfg: ModelConfig
+    step_fn: Callable
+    args: tuple                  # abstract args (ShapeDtypeStruct trees)
+    in_shardings: tuple
+    out_shardings: Any = None    # set when pin_out=True (see #Perf)
+    donate_argnums: tuple = ()
+    model_params_bytes: int = 0
+    notes: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def param_count(shapes_tree) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes_tree))
+
+
+def _batch_axes_or_none(rules, mesh, b):
+    ax = rules.physical("batch")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        total *= sizes[a]
+    return ax if b % total == 0 else None
+
+
+def train_batch_struct(cfg: ModelConfig, b: int, s: int):
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch = {"patches": _sds((b, cfg.num_patches, vlm.D_VIT), jnp.bfloat16),
+                 "tokens": _sds((b, s - cfg.num_patches), jnp.int32)}
+    return batch
+
+
+def _batch_shardings(batch, rules, mesh, b):
+    ax = _batch_axes_or_none(rules, mesh, b)
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(ax, *([None] * (l.ndim - 1)))), batch)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               seq_shard: bool = True, remat: bool | None = None,
+               cfg=None, shape=None, enc_len: int | None = None,
+               cache_axis: str = "seq", pin_out: bool = False,
+               microbatches: int = 1) -> Cell:
+    cfg = cfg if cfg is not None else configs.get(arch)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    shape = shape if shape is not None else configs.SHAPES[shape_name]
+    rules = partition.make_rules(cfg, mesh, fsdp=fsdp, seq_shard=seq_shard,
+                                 cache_axis=cache_axis)
+
+    pspec_tree = partition.tree_shardings(api.param_specs(cfg), rules, mesh)
+    params_struct = _abstract(lambda: api.init_params(
+        jax.random.PRNGKey(0), cfg))
+    n_params = param_count(params_struct)
+
+    if shape.kind == "train":
+        ocfg = opt_mod.OptConfig(state_dtype=cfg.param_dtype)
+        opt_struct = _abstract(lambda: opt_mod.init(params_struct_like(
+            params_struct), ocfg))
+        opt_shard = {
+            "m": pspec_tree, "v": pspec_tree,
+            "count": NamedSharding(mesh, P()),
+        }
+        batch = train_batch_struct(cfg, shape.global_batch, shape.seq_len)
+        batch_shard = _batch_shardings(batch, rules, mesh, shape.global_batch)
+        settings = steps.TrainSettings(microbatches=microbatches)
+        step = steps.make_train_step(cfg, ocfg, settings)
+        out_sh = (pspec_tree, opt_shard, None, None) if pin_out else None
+        return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                    args=(params_struct, opt_struct, batch, None),
+                    in_shardings=(pspec_tree, opt_shard, batch_shard, None),
+                    out_shardings=out_sh,
+                    donate_argnums=(0, 1),
+                    model_params_bytes=n_params)
+
+    if shape.kind == "prefill":
+        batch = train_batch_struct(cfg, shape.global_batch, shape.seq_len)
+        batch_shard = _batch_shardings(batch, rules, mesh, shape.global_batch)
+        step = steps.make_prefill_step(cfg, max_len=shape.seq_len)
+        return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                    args=(params_struct, batch),
+                    in_shardings=(pspec_tree, batch_shard),
+                    model_params_bytes=n_params)
+
+    # decode
+    b = shape.global_batch
+    bax = _batch_axes_or_none(rules, mesh, b)
+    if bax is None:  # tiny batches (long_500k B=1): replicate the batch dim
+        rules = dataclasses.replace(rules, mapping=tuple(
+            (k, None if k == "batch" else v) for k, v in rules.mapping))
+    cache_struct = _abstract(lambda: api.init_cache(
+        cfg, b, max_len=shape.seq_len, enc_len=enc_len or ENC_LEN))
+    cache_shard = partition.tree_shardings(api.cache_specs(cfg), rules, mesh)
+    vec = NamedSharding(mesh, P(bax))
+    token = _sds((b,), jnp.int32)
+    lengths = _sds((b,), jnp.int32)
+    active = _sds((b,), jnp.int32)
+    step = steps.make_serve_decode_step(cfg)
+    out_sh = (None, cache_shard, vec) if pin_out else None
+    return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                args=(params_struct, cache_struct, token, lengths, active),
+                in_shardings=(pspec_tree, cache_shard, vec, vec, vec),
+                out_shardings=out_sh,
+                donate_argnums=(1,),
+                model_params_bytes=n_params)
+
+
+def params_struct_like(struct):
+    """eval_shape trees are already ShapeDtypeStructs — optimizer init only
+    reads .shape, so pass through."""
+    return struct

@@ -1,0 +1,12 @@
+"""Model zoo: the ten assigned architectures, composable in pure JAX.
+
+All families share the conventions in :mod:`repro.models.common`:
+parameters are plain pytrees with layer-stacked leaves (leading ``L``
+dim) consumed by ``lax.scan`` so HLO size — and dry-run compile time —
+is depth-independent; every leaf has a parallel *logical sharding spec*
+(tuples of logical axis names) resolved to mesh ``PartitionSpec`` s by
+:mod:`repro.sharding.partition`.
+"""
+from . import api
+
+__all__ = ["api"]

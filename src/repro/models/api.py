@@ -1,0 +1,112 @@
+"""Uniform model API across the six architecture families.
+
+Every family exposes:
+  init_params(key, cfg)            -> params pytree
+  param_specs(cfg)                 -> logical spec pytree (same structure)
+  loss(cfg, params, batch)         -> scalar  (batch: family-specific dict)
+  init_cache(cfg, batch, max_len)  -> decode cache
+  cache_specs(cfg)                 -> logical specs for the cache
+  decode(cfg, params, cache, token, lengths) -> (logits, cache, lengths)
+  prefill(cfg, params, batch, max_len) -> (logits, cache, lengths)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import attention, encdec, transformer, vlm, xlstm, zamba2
+from .common import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.init_params(key, cfg)
+    if cfg.family == "xlstm":
+        return xlstm.init_params(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    if cfg.family == "vlm":
+        return vlm.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.param_specs(cfg)
+    if cfg.family == "xlstm":
+        return xlstm.param_specs(cfg)
+    if cfg.family == "encdec":
+        return encdec.param_specs(cfg)
+    if cfg.family == "vlm":
+        return vlm.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+def loss(cfg: ModelConfig, params, batch):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.loss_fn(cfg, params, batch["tokens"],
+                              batch.get("mask"))
+    if cfg.family == "xlstm":
+        return xlstm.loss_fn(cfg, params, batch["tokens"], batch.get("mask"))
+    if cfg.family == "encdec":
+        return encdec.loss_fn(cfg, params, batch["frames"], batch["tokens"],
+                              batch.get("mask"))
+    if cfg.family == "vlm":
+        return vlm.loss_fn(cfg, params, batch["patches"], batch["tokens"],
+                           batch.get("mask"))
+    return transformer.loss_fn(cfg, params, batch["tokens"],
+                               mask=batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 4096):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.init_cache(cfg, batch, max_len)
+    if cfg.family == "xlstm":
+        return xlstm.init_cache(cfg, batch)
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len, enc_len)
+    return attention.init_cache(cfg, batch, max_len, cfg.n_layers)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.cache_specs(cfg)
+    if cfg.family == "xlstm":
+        return xlstm.cache_specs(cfg)
+    if cfg.family == "encdec":
+        return encdec.cache_specs(cfg)
+    cs = attention.cache_specs(cfg)
+    return attention.KVCache(cs, cs)
+
+
+def decode(cfg: ModelConfig, params, cache, token, lengths):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.decode_step(cfg, params, cache, token, lengths)
+    if cfg.family == "xlstm":
+        return xlstm.decode_step(cfg, params, cache, token, lengths)
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, cache, token, lengths)
+    return transformer.decode_step(cfg, params, cache, token, lengths)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    if cfg.family == "mamba_hybrid":
+        return zamba2.prefill(cfg, params, batch["tokens"], max_len)
+    if cfg.family == "xlstm":
+        return xlstm.prefill(cfg, params, batch["tokens"])
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        b = batch["frames"].shape[0]
+        enc_lens = jnp.full((b,), batch["frames"].shape[1], jnp.int32)
+        ck, cv, el = encdec.prefill_cross(cfg, params, enc_out, enc_lens)
+        cache = encdec.init_cache(cfg, b, max_len, enc_out.shape[1])
+        cache = dict(cache, cross_k=ck, cross_v=cv, enc_len=el)
+        logits = jnp.zeros((b, cfg.vocab), cfg.dtype)
+        return logits, cache, jnp.zeros((b,), jnp.int32)
+    if cfg.family == "vlm":
+        img = vlm._project(cfg, params, batch["patches"])
+        txt = params["embed"].astype(cfg.dtype)[batch["tokens"]]
+        embeds = jnp.concatenate([img, txt], axis=1)
+        return transformer.prefill(cfg, params, None, embeds=embeds,
+                                   max_len=max_len)
+    return transformer.prefill(cfg, params, batch["tokens"], max_len=max_len)

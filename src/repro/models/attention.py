@@ -1,0 +1,146 @@
+"""GQA attention: training (full-sequence) and decode (KV cache) paths.
+
+The jnp path here is what the CPU dry-run lowers and analyses; on TPU the
+``repro.kernels.flash_attention`` Pallas kernel implements the same math
+with KV-tile skipping (see kernels/flash_attention/kernel.py).  Ragged
+request batches in serving reuse the cache ``lengths`` vector — the
+paper's dynamic-wavefront masking at the request level.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, dense_init, rotary
+
+
+def attn_params(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), 0, cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), 0, cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), 0, cfg.param_dtype),
+        "wo": dense_init(ks[3], (h, hd, d), (0, 1), cfg.param_dtype),
+    }
+    specs = {
+        "wq": ("fsdp", "heads", "hd"),
+        "wk": ("fsdp", "kv_heads", "hd"),
+        "wv": ("fsdp", "kv_heads", "hd"),
+        "wo": ("heads", "hd", "fsdp"),
+    }
+    return p, specs
+
+
+def _gqa_scores(q, k, causal: bool, q_pos, k_valid):
+    """q: (B,KV,G,S,hd), k: (B,KV,T,hd) -> weights (B,KV,G,S,T)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgsh,bkth->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    t = k.shape[2]
+    mask = k_valid[:, None, None, None, :]                   # (B,1,1,1,T)
+    if causal:
+        kpos = jnp.arange(t)[None, None, None, None, :]
+        mask = mask & (kpos <= q_pos[:, None, None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.where(mask, w, 0.0)
+
+
+def attend(cfg: ModelConfig, p, x, positions, *, causal=True,
+           kv_x=None, kv_valid=None, return_kv=False):
+    """Full-sequence attention.  x: (B,S,d).  ``kv_x`` enables cross-attn.
+
+    ``kv_valid``: (B, T) bool ragged-length mask (dynamic wavefront).
+    ``return_kv``: also return (k, v) as (B,KV,T,hd) for prefill caching.
+    """
+    b, s, _ = x.shape
+    h, kv = cfg.n_heads, cfg.kv_heads
+    g = h // kv
+    src = x if kv_x is None else kv_x
+    t = src.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(x.dtype))
+    if kv_x is None:  # rotary only for self-attention
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    q = q.reshape(b, s, kv, g, cfg.hd).transpose(0, 2, 3, 1, 4)
+    k = k.transpose(0, 2, 1, 3)                # (B,KV,T,hd)
+    v = v.transpose(0, 2, 1, 3)
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, t), bool)
+    w = _gqa_scores(q, k, causal and kv_x is None, positions, kv_valid)
+    o = jnp.einsum("bkgst,bkth->bkgsh", w.astype(x.dtype), v)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, s, h, cfg.hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, KV, S_max, hd)
+    v: jnp.ndarray        # (B, KV, S_max, hd)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+               dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (n_layers, batch, cfg.kv_heads, max_len, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical spec for one cache leaf: (layers, batch, kv_heads, seq, hd).
+
+    The partition rules decide whether the model axis lands on "seq"
+    (SP — always divides) or "cache_heads" (when kv_heads divide; fewer
+    collective-permutes on the write path — see EXPERIMENTS.md #Perf).
+    """
+    return (None, "batch", "cache_heads", "seq", None)
+
+
+def _write_at(cache, new, lengths):
+    """cache: (B,KV,S,hd); new: (B,KV,hd); lengths: (B,) write positions."""
+    def upd(c, n, i):
+        return lax.dynamic_update_slice(c, n[:, None, :], (0, i, 0))
+    return jax.vmap(upd)(cache, new, lengths)
+
+
+def attend_decode(cfg: ModelConfig, p, x, layer_cache: KVCache,
+                  lengths, *, rope=True):
+    """One-token decode.  x: (B,d); lengths: (B,) current lengths (the new
+    token is written at ``lengths`` and attends to ``<= lengths``).
+
+    Returns (out (B,d), new_cache).
+    """
+    b, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    g = h // kv
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"].astype(x.dtype))
+    kn = jnp.einsum("bd,dhk->bhk", x, p["wk"].astype(x.dtype))
+    vn = jnp.einsum("bd,dhk->bhk", x, p["wv"].astype(x.dtype))
+    if rope:
+        q = rotary(q[:, None], lengths[:, None], cfg.rope_theta)[:, 0]
+        kn = rotary(kn[:, None], lengths[:, None], cfg.rope_theta)[:, 0]
+    ck = _write_at(layer_cache.k, kn.astype(layer_cache.k.dtype), lengths)
+    cv = _write_at(layer_cache.v, vn.astype(layer_cache.v.dtype), lengths)
+    t = ck.shape[2]
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bkth->bkgt", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    valid = jnp.arange(t)[None, :] <= lengths[:, None]       # (B,T)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgt,bkth->bkgh", w, cv)
+    o = o.reshape(b, h, hd)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))
+    return out, KVCache(k=ck, v=cv)

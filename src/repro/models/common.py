@@ -1,0 +1,128 @@
+"""Shared model components: config, norms, rotary, init, logical specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture (exact values live in ``repro/configs/<id>.py``)."""
+
+    name: str
+    family: str                 # dense | moe | mamba_hybrid | xlstm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    shared_attn_period: int = 0   # zamba2: shared block every k layers
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # vlm
+    num_patches: int = 0
+    # numerics / execution
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    remat: bool = True
+    scan_layers: bool = True
+    tie_embeddings: bool = False
+    logits_chunk: int = 0       # 0 = unchunked loss
+    max_seq: int = 8192
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def supports_long_context(self) -> bool:
+        return self.family in ("mamba_hybrid", "xlstm")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Initialisers — all take an explicit key; leaves are created at param_dtype.
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Primitive layers (pure functions over param dicts)
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rotary(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_in, w_gate, w_out):
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * h, w_out)
+
+
+def softmax_cross_entropy(logits, targets, mask=None):
+    """logits: (B, S, V) — fp32 log-softmax for stability."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Logical sharding axis names (resolved by repro.sharding.partition)
+# --------------------------------------------------------------------------
+# "batch"   — data-parallel batch            -> ("pod","data")
+# "fsdp"    — parameter shard (ZeRO)          -> "data" (when enabled)
+# "heads"   — attention heads                 -> "model" (if divisible)
+# "hd"      — attention head_dim              -> "model" fallback
+# "ff"      — MLP hidden                      -> "model"
+# "vocab"   — embedding rows                  -> "model" (if divisible)
+# "experts" — MoE expert dim                  -> "model" (if divisible)
+# "seq"     — sequence (SP / cache)           -> "model"
+# None      — replicated

@@ -1,0 +1,217 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over
+stub audio-frame embeddings + causal decoder with cross-attention.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d).  Encoder frame
+counts are ragged in practice — ``enc_valid`` masks dead frames, which
+is where the dynamic-wavefront tile skipping applies on the encoder side.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention
+from .scan_util import maybe_scan
+from .common import (ModelConfig, dense_init, embed_init, rms_norm, swiglu,
+                     softmax_cross_entropy)
+
+
+def _enc_block_params(key, cfg):
+    ka, kf = jax.random.split(key)
+    ap, _ = attention.attn_params(ka, cfg)
+    ks = jax.random.split(kf, 3)
+    return {
+        "attn": ap,
+        "ln_attn": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln_mlp": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "mlp": {
+            "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_gate": dense_init(ks[1], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_out": dense_init(ks[2], (cfg.d_ff, cfg.d_model), 0, cfg.param_dtype),
+        },
+    }
+
+
+def _dec_block_params(key, cfg):
+    ka, kc, kf = jax.random.split(key, 3)
+    ap, _ = attention.attn_params(ka, cfg)
+    cp, _ = attention.attn_params(kc, cfg)
+    ks = jax.random.split(kf, 3)
+    return {
+        "self_attn": ap, "cross_attn": cp,
+        "ln_self": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln_cross": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln_mlp": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "mlp": {
+            "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_gate": dense_init(ks[1], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_out": dense_init(ks[2], (cfg.d_ff, cfg.d_model), 0, cfg.param_dtype),
+        },
+    }
+
+
+_ATTN_SPEC = {"wq": ("fsdp", "heads", "hd"), "wk": ("fsdp", "kv_heads", "hd"),
+              "wv": ("fsdp", "kv_heads", "hd"), "wo": ("heads", "hd", "fsdp")}
+_MLP_SPEC = {"w_in": ("fsdp", "ff"), "w_gate": ("fsdp", "ff"),
+             "w_out": ("ff", "fsdp")}
+
+
+def init_params(key, cfg: ModelConfig):
+    k_e, k_enc, k_dec, k_out = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _enc_block_params(k, cfg))(
+        jax.random.split(k_enc, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _dec_block_params(k, cfg))(
+        jax.random.split(k_dec, cfg.dec_layers))
+    return {
+        "embed": embed_init(k_e, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "enc": enc, "dec": dec,
+        "ln_enc": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln_dec": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "unembed": embed_init(k_out, (cfg.d_model, cfg.vocab), cfg.param_dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    lyr = lambda s: jax.tree.map(lambda t: ("layers",) + t, s,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    enc = lyr({"attn": _ATTN_SPEC, "ln_attn": (None,), "ln_mlp": (None,),
+               "mlp": _MLP_SPEC})
+    dec = lyr({"self_attn": _ATTN_SPEC, "cross_attn": _ATTN_SPEC,
+               "ln_self": (None,), "ln_cross": (None,), "ln_mlp": (None,),
+               "mlp": _MLP_SPEC})
+    return {"embed": ("vocab", "fsdp"), "enc": enc, "dec": dec,
+            "ln_enc": (None,), "ln_dec": (None,),
+            "unembed": ("fsdp", "vocab")}
+
+
+def encode(cfg: ModelConfig, params, frame_embeds, enc_valid=None):
+    x = frame_embeds.astype(cfg.dtype)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln_attn"], cfg.norm_eps)
+        carry = carry + attention.attend(cfg, lp["attn"], h, pos,
+                                         causal=False, kv_valid=enc_valid)
+        h = rms_norm(carry, lp["ln_mlp"], cfg.norm_eps)
+        m = lp["mlp"]
+        carry = carry + swiglu(h, m["w_in"].astype(carry.dtype),
+                               m["w_gate"].astype(carry.dtype),
+                               m["w_out"].astype(carry.dtype))
+        return carry, None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = maybe_scan(body, x, params["enc"], unroll_py=not cfg.scan_layers)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, enc_valid=None):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln_self"], cfg.norm_eps)
+        carry = carry + attention.attend(cfg, lp["self_attn"], h, pos,
+                                         causal=True)
+        h = rms_norm(carry, lp["ln_cross"], cfg.norm_eps)
+        carry = carry + attention.attend(cfg, lp["cross_attn"], h, pos,
+                                         causal=False, kv_x=enc_out,
+                                         kv_valid=enc_valid)
+        h = rms_norm(carry, lp["ln_mlp"], cfg.norm_eps)
+        m = lp["mlp"]
+        carry = carry + swiglu(h, m["w_in"].astype(carry.dtype),
+                               m["w_gate"].astype(carry.dtype),
+                               m["w_out"].astype(carry.dtype))
+        return carry, None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = maybe_scan(body, x, params["dec"], unroll_py=not cfg.scan_layers)
+    x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+
+
+def loss_fn(cfg: ModelConfig, params, frame_embeds, tokens, mask=None,
+            enc_valid=None):
+    enc_out = encode(cfg, params, frame_embeds, enc_valid)
+    logits = decode_train(cfg, params, tokens[:, :-1], enc_out, enc_valid)
+    m = mask[:, 1:] if mask is not None else None
+    return softmax_cross_entropy(logits, tokens[:, 1:], m)
+
+
+# --------------------------------------------------------------------------
+# Serving: self-attn KV cache + precomputed cross-attention K/V
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    return {
+        "self": attention.init_cache(cfg, batch, max_len, cfg.dec_layers),
+        "cross_k": jnp.zeros((cfg.dec_layers, batch, cfg.kv_heads, enc_len,
+                              cfg.hd), cfg.dtype),
+        "cross_v": jnp.zeros((cfg.dec_layers, batch, cfg.kv_heads, enc_len,
+                              cfg.hd), cfg.dtype),
+        "enc_len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    cs = attention.cache_specs(cfg)
+    return {"self": attention.KVCache(cs, cs), "cross_k": cs, "cross_v": cs,
+            "enc_len": ("batch",)}
+
+
+def prefill_cross(cfg: ModelConfig, params, enc_out, enc_lengths):
+    """Precompute per-layer cross K/V from encoder output."""
+    def one(lp):
+        k = jnp.einsum("btd,dhk->bhtk", enc_out,
+                       lp["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dhk->bhtk", enc_out,
+                       lp["cross_attn"]["wv"].astype(enc_out.dtype))
+        return k, v
+    ks, vs = jax.vmap(one)(params["dec"])
+    return ks, vs, enc_lengths
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, lengths):
+    x = params["embed"].astype(cfg.dtype)[token]
+    enc_valid = jnp.arange(cache["cross_k"].shape[3])[None, :] \
+        < cache["enc_len"][:, None]
+
+    def body(carry, layer):
+        (xc,) = carry
+        lp, lc, ck, cv = layer
+        h = rms_norm(xc, lp["ln_self"], cfg.norm_eps)
+        a, nc = attention.attend_decode(cfg, lp["self_attn"], h, lc, lengths)
+        xc = xc + a
+        h = rms_norm(xc, lp["ln_cross"], cfg.norm_eps)
+        xc = xc + _cross_decode(cfg, lp["cross_attn"], h, ck, cv, enc_valid)
+        h = rms_norm(xc, lp["ln_mlp"], cfg.norm_eps)
+        m = lp["mlp"]
+        xc = xc + swiglu(h, m["w_in"].astype(xc.dtype),
+                         m["w_gate"].astype(xc.dtype),
+                         m["w_out"].astype(xc.dtype))
+        return (xc,), nc
+
+    (x,), new_self = maybe_scan(
+        body, (x,), (params["dec"], cache["self"], cache["cross_k"],
+                     cache["cross_v"]), unroll_py=not cfg.scan_layers)
+    x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cfg.dtype))
+    new_cache = dict(cache, self=new_self)
+    return logits, new_cache, lengths + 1
+
+
+def _cross_decode(cfg, p, x, ck, cv, valid):
+    """x: (B,d); ck/cv: (B,KV,T,hd)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    g = h // kv
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"].astype(x.dtype)).reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgt,bkth->bkgh", w, cv).reshape(b, h, hd)
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))

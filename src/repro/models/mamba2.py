@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan for training, O(1)
+recurrent state for decode.
+
+Implements the minimal SSD recurrence (Dao & Gu, 2024):
+
+    h_t = exp(a_t) * h_{t-1} + B_t x_t^T        (per head, state N)
+    y_t = C_t h_t + D x_t
+
+trained with the chunked algorithm: intra-chunk quadratic attention-like
+term + inter-chunk state scan.  This is the sub-quadratic path that makes
+``long_500k`` decode (and linear-time prefill) legal for the hybrid
+archs, per DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, dense_init, rms_norm
+from .scan_util import maybe_scan
+
+CHUNK = 256
+
+
+def ssd_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.ssm_heads
+    p_dim = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    inner = h * p_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # fused input projection: [x (inner), z (inner), B (h*n), C (h*n), dt (h)]
+        "w_in": dense_init(ks[0], (d, 2 * inner + 2 * h * n + h), 0,
+                           cfg.param_dtype),
+        "w_out": dense_init(ks[1], (inner, d), 0, cfg.param_dtype),
+        "a_log": jnp.zeros((h,), cfg.param_dtype),       # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((h,), cfg.param_dtype),
+        "ln": jnp.ones((d,), cfg.param_dtype),
+    }
+    specs = {
+        "w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp"),
+        "a_log": (None,), "d_skip": (None,), "dt_bias": (None,),
+        "ln": (None,),
+    }
+    return p, specs
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    h, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = h * p_dim
+    x, z, bmat, cmat, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + h * n, 2 * inner + 2 * h * n],
+        axis=-1)
+    return x, z, bmat, cmat, dt
+
+
+def _segsum(a):
+    """a: (..., T) -> (..., T, T) lower-triangular cumulative sums:
+    out[i, j] = sum(a[j+1..i]) for j < i."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_apply(cfg: ModelConfig, p, u, positions=None, return_state=False):
+    """u: (B, S, d) -> (B, S, d). Chunked SSD, S % CHUNK == 0 (padded ok)."""
+    b, s, d = u.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", u, p["w_in"].astype(u.dtype))
+    x, z, bm, cm, dt = _split_proj(cfg, proj)
+    x = x.reshape(b, s, h, pd)
+    bm = bm.reshape(b, s, h, n).astype(jnp.float32)
+    cm = cm.reshape(b, s, h, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt            # (B,S,H) log-decay
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    cl = CHUNK if s % CHUNK == 0 else s      # small sequences: one chunk
+    nc = s // cl
+    # reshape into chunks: (B, NC, CL, ...)
+    ar = a.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)            # (B,H,NC,CL)
+    xr = xdt.reshape(b, nc, cl, h, pd)
+    br = bm.reshape(b, nc, cl, h, n)
+    cr = cm.reshape(b, nc, cl, h, n)
+
+    # 1. intra-chunk (quadratic within the chunk)
+    ls = jnp.exp(_segsum(ar))                                     # (B,H,NC,CL,CL)
+    att = jnp.einsum("bclhn,bcshn->bhcls", cr, br)                # (B,H,NC,CL,CL)
+    y_diag = jnp.einsum("bhcls,bhcls,bcshp->bclhp", att, ls, xr)
+
+    # 2. chunk-final states
+    a_cum = jnp.cumsum(ar, axis=-1)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)               # (B,H,NC,CL)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchnp", br, decay_states, xr)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])                         # (B,H,NC)
+
+    def scan_body(carry, inp):
+        st, dec = inp                                             # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                         # emit prev state
+
+    init = jnp.zeros((b, h, n, pd), jnp.float32)
+    final_state, prev_states = maybe_scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+        unroll_py=not cfg.scan_layers)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)            # (B,NC,H,N,P)
+
+    # 4. inter-chunk output contribution
+    state_decay = jnp.exp(a_cum)                                  # (B,H,NC,CL)
+    y_off = jnp.einsum("bclhn,bhcl,bchnp->bclhp", cr, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, pd)
+    y = y + xdt.reshape(b, s, h, pd) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.astype(u.dtype).reshape(b, s, h * pd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(u.dtype))
+    if return_state:
+        return out, final_state
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode: recurrent state
+# --------------------------------------------------------------------------
+
+def init_ssd_state(cfg: ModelConfig, batch: int, n_layers: int):
+    return jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_head_dim), jnp.float32)
+
+
+def ssd_state_spec():
+    return (None, "batch", None, None, None)
+
+
+def ssd_decode(cfg: ModelConfig, p, u, state):
+    """u: (B, d); state: (B, H, N, P) -> (y (B, d), new_state)."""
+    b, d = u.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bd,de->be", u, p["w_in"].astype(u.dtype))
+    x, z, bm, cm, dt = _split_proj(cfg, proj)
+    x = x.reshape(b, h, pd).astype(jnp.float32)
+    bm = bm.reshape(b, h, n).astype(jnp.float32)
+    cm = cm.reshape(b, h, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)  # (B,H)
+    xdt = x * dt[..., None]
+    new_state = state * decay[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", bm, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", cm, new_state)
+    y = y + xdt * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, h * pd).astype(u.dtype) * jax.nn.silu(z)
+    return jnp.einsum("be,ed->bd", y, p["w_out"].astype(u.dtype)), new_state

@@ -1,0 +1,33 @@
+"""maybe_scan: lax.scan or an unrolled python loop, by config.
+
+Why: XLA's ``cost_analysis`` on the compiled dry-run counts a loop body
+ONCE regardless of trip count (verified empirically — see
+EXPERIMENTS.md §Roofline methodology).  The roofline calibration
+therefore compiles small configurations with ``cfg.scan_layers=False``,
+where every scan (layer stacks, SSD chunk loops, recurrent seq loops)
+unrolls into straight-line HLO whose cost analysis is exact, and fits a
+polynomial in (layers, sequence) to recover the true totals.
+Production/training paths keep ``scan_layers=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def maybe_scan(body, carry, xs, *, unroll_py: bool, length: int | None = None):
+    """Drop-in for ``lax.scan(body, carry, xs, length=...)``."""
+    if not unroll_py:
+        return lax.scan(body, carry, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

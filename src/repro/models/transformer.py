@@ -1,0 +1,225 @@
+"""Decoder-only transformer (dense GQA or MoE FFN), layer-scanned.
+
+Covers yi-9b, phi3-medium, llama3-405b, minitron-4b, qwen3-moe,
+granite-moe, the internvl2 LM backbone, and the shared attention block of
+zamba2.  Parameters are stacked on a leading layer dim and consumed with
+``lax.scan`` (HLO size independent of depth — essential for the 80-cell
+dry-run matrix); per-layer remat is a config flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention, moe
+from .scan_util import maybe_scan
+from .common import (ModelConfig, dense_init, embed_init, rms_norm, swiglu,
+                     softmax_cross_entropy)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def block_params(key, cfg: ModelConfig):
+    ka, kf = jax.random.split(key)
+    ap, aspec = attention.attn_params(ka, cfg)
+    p = {"attn": ap,
+         "ln_attn": jnp.ones((cfg.d_model,), cfg.param_dtype),
+         "ln_mlp": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    specs = {"attn": aspec, "ln_attn": (None,), "ln_mlp": (None,)}
+    if cfg.family == "moe" or cfg.num_experts:
+        mp, mspec = moe.moe_params(kf, cfg)
+        p["moe"] = mp
+        specs["moe"] = mspec
+    else:
+        ks = jax.random.split(kf, 3)
+        p["mlp"] = {
+            "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_gate": dense_init(ks[1], (cfg.d_model, cfg.d_ff), 0, cfg.param_dtype),
+            "w_out": dense_init(ks[2], (cfg.d_ff, cfg.d_model), 0, cfg.param_dtype),
+        }
+        specs["mlp"] = {"w_in": ("fsdp", "ff"), "w_gate": ("fsdp", "ff"),
+                        "w_out": ("ff", "fsdp")}
+    return p, specs
+
+
+def block_specs(cfg: ModelConfig):
+    specs = {"attn": {"wq": ("fsdp", "heads", "hd"),
+                      "wk": ("fsdp", "kv_heads", "hd"),
+                      "wv": ("fsdp", "kv_heads", "hd"),
+                      "wo": ("heads", "hd", "fsdp")},
+             "ln_attn": (None,), "ln_mlp": (None,)}
+    if cfg.family == "moe" or cfg.num_experts:
+        specs["moe"] = {"router": ("fsdp", None),
+                        "w_in": ("experts", "fsdp", "expert_ff"),
+                        "w_gate": ("experts", "fsdp", "expert_ff"),
+                        "w_out": ("experts", "expert_ff", "fsdp")}
+    else:
+        specs["mlp"] = {"w_in": ("fsdp", "ff"), "w_gate": ("fsdp", "ff"),
+                        "w_out": ("ff", "fsdp")}
+    return specs
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_params(k, cfg)[0])(block_keys)
+    params = {
+        "embed": embed_init(k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(k_out, (cfg.d_model, cfg.vocab),
+                                       cfg.param_dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Logical sharding specs, mirroring :func:`init_params` (layer-stacked
+    block leaves get a leading "layers" axis)."""
+    stack = jax.tree.map(lambda s: ("layers",) + s, block_specs(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    specs = {"embed": ("vocab", "fsdp"), "blocks": stack, "ln_f": (None,)}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("fsdp", "vocab")
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def block_apply(cfg: ModelConfig, p, x, positions):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    x = x + attention.attend(cfg, p["attn"], h, positions)
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe.moe_apply(cfg, p["moe"], h)
+    else:
+        m = p["mlp"]
+        x = x + swiglu(h, m["w_in"].astype(x.dtype),
+                       m["w_gate"].astype(x.dtype), m["w_out"].astype(x.dtype))
+    return x
+
+
+def run_stack(cfg: ModelConfig, blocks, x, positions):
+    def body(carry, lp):
+        return block_apply(cfg, lp, carry, positions), None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = maybe_scan(body, x, blocks, unroll_py=not cfg.scan_layers)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, *, embeds=None, positions=None):
+    """tokens: (B, S) int32 (or ``embeds``: (B,S,d)).  Returns logits."""
+    if embeds is None:
+        x = params["embed"].astype(cfg.dtype)[tokens]
+    else:
+        x = embeds.astype(cfg.dtype)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = run_stack(cfg, params["blocks"], x, positions)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(cfg, params, x)
+
+
+def unembed(cfg: ModelConfig, params, x):
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    return jnp.einsum("...d,dv->...v", x, w.astype(cfg.dtype))
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, *, embeds=None, mask=None):
+    logits = forward(cfg, params, tokens[:, :-1],
+                     embeds=None if embeds is None else embeds[:, :-1])
+    targets = tokens[:, 1:]
+    m = mask[:, 1:] if mask is not None else None
+    return softmax_cross_entropy(logits, targets, m)
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, embeds=None, max_len=None):
+    """Prefill: forward pass that also builds the KV cache.
+
+    Returns (last-token logits (B, V), KVCache (L,B,KV,max_len,hd),
+    lengths (B,)).
+    """
+    if embeds is None:
+        x = params["embed"].astype(cfg.dtype)[tokens]
+    else:
+        x = embeds.astype(cfg.dtype)
+    b, s = x.shape[:2]
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln_attn"], cfg.norm_eps)
+        a, (k, v) = attention.attend(cfg, lp["attn"], h, positions,
+                                     return_kv=True)
+        carry = carry + a
+        h = rms_norm(carry, lp["ln_mlp"], cfg.norm_eps)
+        if "moe" in lp:
+            carry = carry + moe.moe_apply(cfg, lp["moe"], h)
+        else:
+            m = lp["mlp"]
+            carry = carry + swiglu(h, m["w_in"].astype(carry.dtype),
+                                   m["w_gate"].astype(carry.dtype),
+                                   m["w_out"].astype(carry.dtype))
+        return carry, (k, v)
+
+    x, (ks, vs) = maybe_scan(body, x, params["blocks"],
+                             unroll_py=not cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1])
+    pad = max_len - s
+    if pad > 0:
+        padw = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+        ks = jnp.pad(ks, padw)
+        vs = jnp.pad(vs, padw)
+    cache = attention.KVCache(k=ks, v=vs)
+    return logits, cache, jnp.full((b,), s, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def block_decode(cfg: ModelConfig, p, x, layer_cache, lengths):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    a, new_cache = attention.attend_decode(cfg, p["attn"], h, layer_cache,
+                                           lengths)
+    x = x + a
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe.moe_apply(cfg, p["moe"], h[:, None, :])[:, 0, :]
+    else:
+        m = p["mlp"]
+        x = x + swiglu(h, m["w_in"].astype(x.dtype),
+                       m["w_gate"].astype(x.dtype), m["w_out"].astype(x.dtype))
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: attention.KVCache,
+                token, lengths):
+    """One decode step.  token: (B,) int32; lengths: (B,).
+
+    Returns (logits (B, V), new_cache, new_lengths).
+    """
+    x = params["embed"].astype(cfg.dtype)[token]
+
+    def body(carry, layer):
+        xc, = carry
+        lp, lc = layer
+        xn, nc = block_decode(cfg, lp, xc, lc, lengths)
+        return (xn,), nc
+
+    (x,), new_kv = maybe_scan(body, (x,), (params["blocks"], cache),
+                              unroll_py=not cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+    return logits, new_kv, lengths + 1

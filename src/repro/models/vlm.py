@@ -1,0 +1,66 @@
+"""internvl2: stub ViT frontend + InternLM2-style dense LM backbone.
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, P, d_vit); we keep only the connector
+(2-layer MLP, as in InternVL) + the LM backbone.  Prefill consumes the
+mixed [patch, token] sequence; decode is the plain LM decode over a cache
+whose first P positions are image states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .common import ModelConfig, dense_init, softmax_cross_entropy
+
+D_VIT = 1024   # InternViT-300M hidden size (frontend stub output)
+
+
+def init_params(key, cfg: ModelConfig):
+    k_lm, k_c1, k_c2 = jax.random.split(key, 3)
+    p = transformer.init_params(k_lm, cfg)
+    p["connector"] = {
+        "w1": dense_init(k_c1, (D_VIT, cfg.d_model), 0, cfg.param_dtype),
+        "w2": dense_init(k_c2, (cfg.d_model, cfg.d_model), 0, cfg.param_dtype),
+    }
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    s = transformer.param_specs(cfg)
+    s["connector"] = {"w1": (None, "fsdp"), "w2": ("fsdp", None)}
+    return s
+
+
+def _project(cfg, params, patch_embeds):
+    h = jnp.einsum("bpe,ed->bpd", patch_embeds.astype(cfg.dtype),
+                   params["connector"]["w1"].astype(cfg.dtype))
+    return jnp.einsum("bpd,de->bpe", jax.nn.gelu(h),
+                      params["connector"]["w2"].astype(cfg.dtype))
+
+
+def forward(cfg: ModelConfig, params, patch_embeds, tokens):
+    """patch_embeds: (B, P, D_VIT); tokens: (B, S_text)."""
+    img = _project(cfg, params, patch_embeds)
+    txt = params["embed"].astype(cfg.dtype)[tokens]
+    x = jnp.concatenate([img, txt], axis=1)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = transformer.run_stack(cfg, params["blocks"], x, pos)
+    from .common import rms_norm
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    p_len = img.shape[1]
+    return transformer.unembed(cfg, params, x[:, p_len:])
+
+
+def loss_fn(cfg: ModelConfig, params, patch_embeds, tokens, mask=None):
+    logits = forward(cfg, params, patch_embeds, tokens[:, :-1])
+    m = mask[:, 1:] if mask is not None else None
+    return softmax_cross_entropy(logits, tokens[:, 1:], m)
+
+
+# Decode reuses the plain transformer cache/step (image states live in the
+# first P cache positions after prefill).
+init_cache = transformer.attention.init_cache
+decode_step = transformer.decode_step

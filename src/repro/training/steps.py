@@ -1,0 +1,130 @@
+"""Train / serve step builders (the functions the launcher jits and the
+dry-run lowers).
+
+Distributed-optimization features, all config-gated:
+  * microbatch gradient accumulation (scan) with *drop-stale-microbatch*
+    straggler mitigation — a boolean keep-mask zeroes contributions from
+    microbatches flagged as stragglers, rescaling by the kept count;
+  * gradient compression (int8 + error feedback) around the DP reduction;
+  * NaN/non-finite sentinel: the update is skipped (params passed
+    through) when the loss or grad norm is non-finite, and the sentinel
+    is reported so the driver can restore from checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import api
+from ..models.common import ModelConfig
+from . import compression, optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    microbatches: int = 1
+    compress_grads: bool = False
+    straggler_mitigation: bool = False
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt_mod.OptConfig,
+                    settings: TrainSettings = TrainSettings()):
+    """Returns train_step(params, opt_state, batch, ef_residual) ->
+    (params, opt_state, ef_residual, metrics)."""
+
+    def loss_of(params, batch):
+        return api.loss(cfg, params, batch)
+
+    def grads_of(params, batch):
+        if settings.microbatches <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        mb = settings.microbatches
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        batch_mb = jax.tree.map(split, batch)
+        keep = batch.get("microbatch_keep")
+        if keep is None:
+            keep = jnp.ones((mb,), jnp.float32)
+
+        def body(carry, inp):
+            acc_l, acc_g = carry
+            b, k = inp
+            l, g = jax.value_and_grad(loss_of)(params, b)
+            acc_g = jax.tree.map(
+                lambda a, x: a + k * x.astype(jnp.float32), acc_g, g)
+            return (acc_l + k * l.astype(jnp.float32), acc_g), None
+
+        zero_g = jax.tree.map(
+            lambda p_: jnp.zeros(p_.shape, jnp.float32), params)
+        mb_batches = {k: v for k, v in batch_mb.items()
+                      if k != "microbatch_keep"}
+        (tl, tg), _ = lax.scan(body, (jnp.float32(0.0), zero_g),
+                               (mb_batches, keep))
+        denom = jnp.maximum(jnp.sum(keep), 1.0)
+        return tl / denom, jax.tree.map(lambda g: g / denom, tg)
+
+    def train_step(params, opt_state, batch, ef_residual):
+        loss, grads = grads_of(params, batch)
+        if settings.compress_grads:
+            grads, ef_residual = compression.apply_error_feedback(
+                grads, ef_residual)
+        new_params, new_opt, info = opt_mod.apply(params, grads, opt_state,
+                                                  ocfg)
+        finite = jnp.isfinite(loss) & jnp.isfinite(info["grad_norm"])
+        # non-finite sentinel: skip the update (fault tolerance)
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_opt, opt_state)
+        metrics = {"loss": loss, "grad_norm": info["grad_norm"],
+                   "lr": info["lr"],
+                   "finite": finite.astype(jnp.float32)}
+        return new_params, new_opt, ef_residual, metrics
+
+    return train_step
+
+
+def make_serve_decode_step(cfg: ModelConfig, mask_cache: bool = False):
+    """decode_step(params, cache, token, lengths, active) — ``active`` is
+    the per-request dynamic-wavefront mask: finished/empty slots keep
+    their lengths frozen (no dead time, Table 3 semantics at request
+    granularity).
+
+    ``mask_cache=False`` (default, #Perf iteration): only ``lengths`` are
+    masked.  An inactive slot still writes its (garbage) k/v at its
+    frozen position, but that row is overwritten when the slot is
+    re-prefilled for a new request and is never read meanwhile — masking
+    lengths alone avoids a full cache read+select+write per step.
+    ``mask_cache=True`` keeps the fully-masked (pristine-cache) variant.
+    """
+
+    def step(params, cache, token, lengths, active):
+        logits, new_cache, new_lengths = api.decode(cfg, params, cache,
+                                                    token, lengths)
+        keep = active.astype(jnp.bool_)
+        if mask_cache:
+            def merge(new, old):
+                if new.shape == old.shape and new.ndim >= 1 \
+                        and old.shape[0] == keep.shape[0]:
+                    bshape = (keep.shape[0],) + (1,) * (new.ndim - 1)
+                    return jnp.where(keep.reshape(bshape), new, old)
+                if new.ndim >= 2 and new.shape[1] == keep.shape[0]:
+                    bshape = (1, keep.shape[0]) + (1,) * (new.ndim - 2)
+                    return jnp.where(keep.reshape(bshape), new, old)
+                return new
+            new_cache = jax.tree.map(merge, new_cache, cache)
+        new_lengths = jnp.where(keep, new_lengths, lengths)
+        return logits, new_cache, new_lengths
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def step(params, batch):
+        return api.prefill(cfg, params, batch, max_len)
+    return step

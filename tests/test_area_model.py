@@ -1,0 +1,64 @@
+"""Area/Fmax model vs the paper's Tables 4, 5 and 6."""
+import pytest
+
+from repro.core import area_model, table4_configs, table5_configs
+from repro.core.area_model import PAPER_TABLE4, PAPER_TABLE5, resources
+
+
+@pytest.mark.parametrize("name", list(PAPER_TABLE4))
+def test_table4_m20k_exact(name):
+    cfg = table4_configs()[name]
+    r = resources(cfg)
+    alm, ff, dsp, m20k, soft, fmax = PAPER_TABLE4[name]
+    assert r.m20ks == m20k, f"{name}: M20K {r.m20ks} != paper {m20k}"
+    assert r.dsps == dsp
+    assert r.fmax_mhz == fmax
+
+
+@pytest.mark.parametrize("name", list(PAPER_TABLE4))
+def test_table4_alm_ff_within_tolerance(name):
+    cfg = table4_configs()[name]
+    r = resources(cfg)
+    alm, ff, *_ = PAPER_TABLE4[name]
+    assert abs(r.alms - alm) / alm < 0.15, (r.alms, alm)
+    assert abs(r.ffs - ff) / ff < 0.20, (r.ffs, ff)
+
+
+@pytest.mark.parametrize("name", list(PAPER_TABLE5))
+def test_table5_qp(name):
+    cfg = table5_configs()[name]
+    r = resources(cfg)
+    alm, ff, dsp, m20k, soft, fmax = PAPER_TABLE5[name]
+    assert abs(r.m20ks - m20k) <= 1      # §5.5 QP halving (1-block slack)
+    assert r.dsps == dsp
+    assert r.fmax_mhz == 600.0
+    assert abs(r.alms - alm) / alm < 0.30
+
+
+def test_qp_memory_halving_requires_min_register_space():
+    from repro.core import EGPUConfig
+    small = EGPUConfig(memory_mode="qp", max_threads=512, regs_per_thread=16,
+                       shared_kb=8)
+    dp = EGPUConfig(memory_mode="dp", max_threads=512, regs_per_thread=16,
+                    shared_kb=8)
+    # 512*16/16 = 512 <= 2047: below the QP minimum -> same reg M20Ks as DP
+    assert area_model.m20k_registers(small) == area_model.m20k_registers(dp)
+
+
+def test_predicates_cost_about_half_more_logic():
+    """§5.3: predicate support increases soft logic by ~50%."""
+    from repro.core import EGPUConfig
+    base = EGPUConfig(alu_bits=16, shift_bits=16, alu_features="full",
+                      predicate_levels=0, shared_kb=32)
+    pred = base.replace(predicate_levels=5)
+    r0, r1 = resources(base), resources(pred)
+    ratio = r1.alms / r0.alms
+    assert 1.25 < ratio < 1.75
+
+
+def test_normalized_cost_and_nios_reference():
+    assert area_model.NIOS_ALMS + 100 * area_model.NIOS_DSPS == 1400
+    cfg = table4_configs()["medium_dp_b"]
+    r = resources(cfg)
+    # §7: the benchmark configuration has an equivalent cost ~7400-9000 ALMs
+    assert 7000 < r.normalized_cost < 16000

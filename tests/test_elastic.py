@@ -1,0 +1,64 @@
+"""Elastic checkpoint restore + mesh construction — run in a subprocess
+with 8 placeholder host devices (the main pytest process must keep the
+default single-device view)."""
+import subprocess
+import sys
+import textwrap
+
+
+def _run(code: str):
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd="/root/repo")
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    r = _run(f"""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.training import checkpoint
+
+    tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+             "b": jnp.ones((8,), jnp.float32)}}
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    sh_a = {{"w": NamedSharding(mesh_a, P("data", "model")),
+             "b": NamedSharding(mesh_a, P("data"))}}
+    placed = jax.tree.map(jax.device_put, tree, sh_a)
+    checkpoint.save(r"{tmp_path}", 11, placed)
+
+    # 'failed pod': restore the same logical state onto a (2, 4) mesh
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+    sh_b = {{"w": NamedSharding(mesh_b, P("data", "model")),
+             "b": NamedSharding(mesh_b, P("data"))}}
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step, _ = checkpoint.restore(r"{tmp_path}", like,
+                                           shardings=sh_b)
+    assert step == 11
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding.mesh.devices.shape == (2, 4)
+    print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_production_mesh_shapes():
+    r = _run("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.launch.mesh import make_production_mesh
+    m1 = make_production_mesh()
+    assert m1.devices.shape == (16, 16)
+    assert m1.axis_names == ("data", "model")
+    m2 = make_production_mesh(multi_pod=True)
+    assert m2.devices.shape == (2, 16, 16)
+    assert m2.axis_names == ("pod", "data", "model")
+    print("MESH_OK")
+    """)
+    assert "MESH_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,217 @@
+"""Instruction-semantics tests: the JAX executor vs numpy int64 oracles.
+
+One shared small config keeps jit cache warm across the suite.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Asm, EGPUConfig, Op, Typ, init_state, run_program)
+from repro.core import machine as machine_mod
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+U32 = lambda x: np.uint32(x & 0xFFFFFFFF)
+
+
+def run_binop(op_emit, a_vals, b_vals, typ=Typ.I32):
+    """Load per-thread a/b via shared memory, run op, read result col."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)        # ra values at shared[0:32]
+    a.lod(3, 1, 32)       # rb values at shared[32:64]
+    op_emit(a, 4, 2, 3, typ)
+    a.sto(4, 1, 64)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    buf = np.zeros(128, np.uint32)
+    buf[:32] = a_vals.astype(np.uint32)
+    buf[32:64] = b_vals.astype(np.uint32)
+    st_ = run_program(img, shared_init=buf, tdx_dim=32)
+    assert int(st_.hazard_violations) == 0
+    return machine_mod.shared_as_u32(st_)[64:96]
+
+
+ints = st.integers(0, 0xFFFFFFFF)
+
+
+@given(st.lists(ints, min_size=32, max_size=32),
+       st.lists(ints, min_size=32, max_size=32))
+@settings(max_examples=6, deadline=None)
+def test_add_sub_match_two_complement(av, bv):
+    a = np.array(av, np.uint32)
+    b = np.array(bv, np.uint32)
+    got = run_binop(lambda s, rd, ra, rb, t: s.add(rd, ra, rb, t), a, b)
+    assert np.array_equal(got, (a + b).astype(np.uint32))
+    got = run_binop(lambda s, rd, ra, rb, t: s.sub(rd, ra, rb, t), a, b)
+    assert np.array_equal(got, (a - b).astype(np.uint32))
+
+
+@given(st.lists(ints, min_size=32, max_size=32),
+       st.lists(ints, min_size=32, max_size=32))
+@settings(max_examples=5, deadline=None)
+def test_mul16_and_mul24(av, bv):
+    a = np.array(av, np.uint32)
+    b = np.array(bv, np.uint32)
+    a16 = (a & 0xFFFF).astype(np.int64)
+    b16 = (b & 0xFFFF).astype(np.int64)
+    got = run_binop(lambda s, rd, ra, rb, t: s.mul16lo(rd, ra, rb, t), a, b,
+                    Typ.U32)
+    assert np.array_equal(got, ((a16 * b16) & 0xFFFFFFFF).astype(np.uint32))
+    got = run_binop(lambda s, rd, ra, rb, t: s.mul16hi(rd, ra, rb, t), a, b,
+                    Typ.U32)
+    assert np.array_equal(got, ((a16 * b16) >> 16).astype(np.uint32))
+    # signed 24-bit high product
+    def s24(x):
+        x = x.astype(np.int64) & 0xFFFFFF
+        return np.where(x >= 1 << 23, x - (1 << 24), x)
+    p = s24(a) * s24(b)
+    got = run_binop(lambda s, rd, ra, rb, t: s.mul24hi(rd, ra, rb, t), a, b,
+                    Typ.I32)
+    assert np.array_equal(got, ((p >> 24) & 0xFFFFFFFF).astype(np.uint32))
+
+
+@given(st.lists(ints, min_size=32, max_size=32),
+       st.lists(st.integers(0, 31), min_size=32, max_size=32))
+@settings(max_examples=5, deadline=None)
+def test_shifts(av, sh):
+    a = np.array(av, np.uint32)
+    s_ = np.array(sh, np.uint32)
+    got = run_binop(lambda x, rd, ra, rb, t: x.shl(rd, ra, rb, t), a, s_,
+                    Typ.U32)
+    assert np.array_equal(got, (a.astype(np.int64) << s_).astype(np.uint32))
+    got = run_binop(lambda x, rd, ra, rb, t: x.shr(rd, ra, rb, t), a, s_,
+                    Typ.U32)
+    assert np.array_equal(got, (a >> s_).astype(np.uint32))
+    got = run_binop(lambda x, rd, ra, rb, t: x.shr(rd, ra, rb, t), a, s_,
+                    Typ.I32)
+    assert np.array_equal(got, (a.view(np.int32) >> s_).astype(np.int32).view(np.uint32))
+
+
+@given(st.lists(ints, min_size=32, max_size=32))
+@settings(max_examples=4, deadline=None)
+def test_unary_ops(av):
+    a = np.array(av, np.uint32)
+    b = np.zeros(32, np.uint32)
+    got = run_binop(lambda s, rd, ra, rb, t: s.pop(rd, ra), a, b)
+    assert np.array_equal(got, np.array([bin(x).count("1") for x in a],
+                                        np.uint32))
+    got = run_binop(lambda s, rd, ra, rb, t: s.bvs(rd, ra), a, b)
+    exp = np.array([int(f"{x:032b}"[::-1], 2) for x in a], np.uint32)
+    assert np.array_equal(got, exp)
+    got = run_binop(lambda s, rd, ra, rb, t: s.cnot(rd, ra), a, b)
+    assert np.array_equal(got, (a == 0).astype(np.uint32))
+
+
+def test_fp_ops_bitcast_through_registers():
+    rng = np.random.default_rng(0)
+    af = rng.standard_normal(32).astype(np.float32)
+    bf = rng.standard_normal(32).astype(np.float32)
+    a, b = af.view(np.uint32), bf.view(np.uint32)
+    got = run_binop(lambda s, rd, ra, rb, t: s.fadd(rd, ra, rb), a, b)
+    assert np.array_equal(got.view(np.float32), af + bf)
+    got = run_binop(lambda s, rd, ra, rb, t: s.fmul(rd, ra, rb), a, b)
+    assert np.array_equal(got.view(np.float32), af * bf)
+    got = run_binop(lambda s, rd, ra, rb, t: s.fmax(rd, ra, rb), a, b)
+    assert np.array_equal(got.view(np.float32), np.maximum(af, bf))
+
+
+def test_max_min_signed_unsigned():
+    a = np.array([0xFFFFFFFF, 5, 0x80000000, 7] * 8, np.uint32)
+    b = np.array([1, 0xFFFFFFFE, 3, 7] * 8, np.uint32)
+    got = run_binop(lambda s, rd, ra, rb, t: s.max_(rd, ra, rb, t), a, b,
+                    Typ.I32)
+    assert np.array_equal(got.view(np.int32),
+                          np.maximum(a.view(np.int32), b.view(np.int32)))
+    got = run_binop(lambda s, rd, ra, rb, t: s.max_(rd, ra, rb, t), a, b,
+                    Typ.U32)
+    assert np.array_equal(got, np.maximum(a, b))
+
+
+def test_nested_predicates_and_else():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 8)
+    a.lodi(3, 4)
+    a.if_("lt", 1, 2, typ=Typ.U32)        # t < 8
+    a.if_("lt", 1, 3, typ=Typ.U32)        # t < 4
+    a.lodi(4, 1)
+    a.else_()
+    a.lodi(4, 2)
+    a.endif()
+    a.else_()
+    a.lodi(4, 3)
+    a.endif()
+    a.sto(4, 1, 0)
+    a.stop()
+    st_ = run_program(a.assemble(threads_active=32), tdx_dim=32)
+    got = machine_mod.shared_as_u32(st_)[:32]
+    exp = np.where(np.arange(32) < 4, 1, np.where(np.arange(32) < 8, 2, 3))
+    assert np.array_equal(got, exp)
+    assert int(st_.hazard_violations) == 0
+
+
+def test_jsr_rts_and_nested_loops():
+    a = Asm(CFG)
+    a.lodi(1, 0)
+    a.lodi(5, 1)
+    with a.loop(3):
+        with a.loop(4):
+            a.jsr("incr")
+    a.sto(1, 0, 10, tsc="mcu")
+    a.stop()
+    a.label("incr")
+    a.add(1, 1, 5)
+    a.rts()
+    st_ = run_program(a.assemble(threads_active=32), tdx_dim=32)
+    assert machine_mod.shared_as_u32(st_)[10] == 12
+    assert int(st_.hazard_violations) == 0
+
+
+def test_tsc_masks_issue_cycles():
+    """Full-width store = 16 cycles/wavefront; MCU store = 1 (Table 3)."""
+    def prog(tsc):
+        a = Asm(CFG)
+        a.tdx(1)
+        a.sto(1, 1, 0, tsc=tsc)
+        a.stop()
+        return run_program(a.assemble(threads_active=32), tdx_dim=32)
+    full = prog("full")          # 2 wavefronts x 16 = 32 cycles for STO
+    mcu = prog("mcu")            # 1 cycle
+    # subtract the common TDX + STOP cycles
+    assert int(full.cycles) - int(mcu.cycles) == 31
+
+
+def test_dot_and_sum_units():
+    rng = np.random.default_rng(1)
+    vals = rng.standard_normal(32).astype(np.float32)
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.sum_(3, 2)
+    a.dot(4, 2, 2)
+    a.sto(3, 0, 40, tsc="mcu")
+    a.sto(4, 0, 41, tsc="mcu")
+    a.stop()
+    st_ = run_program(a.assemble(threads_active=32), shared_init=vals,
+                      tdx_dim=32)
+    out = machine_mod.shared_as_f32(st_)
+    assert np.isclose(out[40], vals.sum(), rtol=1e-5)
+    assert np.isclose(out[41], (vals * vals).sum(), rtol=1e-5)
+    assert int(st_.hazard_violations) == 0
+
+
+def test_hazard_checker_flags_unscheduled_raw():
+    a = Asm(CFG)
+    a.lodi(1, 7, tsc="mcu")
+    a.add(2, 1, 1, tsc="mcu")    # reads r1 one cycle after LODI: hazard
+    a.stop()
+    img = a.assemble(threads_active=32, schedule_nops=False)
+    st_ = run_program(img, tdx_dim=32)
+    assert int(st_.hazard_violations) > 0
+    img2 = a.assemble(threads_active=32, schedule_nops=True)
+    st2 = run_program(img2, tdx_dim=32)
+    assert int(st2.hazard_violations) == 0
+    assert int(st2.cycles) > int(st_.cycles)   # the NOPs cost cycles

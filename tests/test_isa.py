@@ -1,0 +1,47 @@
+"""ISA-level tests: instruction count, word packing, TSC coding."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.isa import Instr, Op, Typ
+
+
+def test_opcode_count_is_61():
+    assert isa.NUM_OPCODES == 61
+    conds = [op for op in Op if op.name.startswith("IF_")]
+    assert len(conds) == 18          # "including 18 conditional cases"
+
+
+def test_iw_widths_match_paper():
+    # §5.4: 40/43/46-bit IWs for 16/32/64 registers per thread
+    assert isa.iw_bits(16) == 40
+    assert isa.iw_bits(32) == 43
+    assert isa.iw_bits(64) == 46
+
+
+@pytest.mark.parametrize("regs", [16, 32, 64])
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_word_roundtrip(regs, data):
+    ins = Instr(
+        op=data.draw(st.integers(0, isa.NUM_OPCODES - 1)),
+        typ=data.draw(st.integers(0, 2)),
+        rd=data.draw(st.integers(0, regs - 1)),
+        ra=data.draw(st.integers(0, regs - 1)),
+        rb=data.draw(st.integers(0, regs - 1)),
+        imm=data.draw(st.integers(-32768, 32767)),
+        tsc=data.draw(st.integers(0, 15)),
+    )
+    word = isa.encode_word(ins, regs)
+    assert word < (1 << (isa.iw_bits(regs) + 1))
+    back = isa.decode_word(word, regs)
+    assert back == ins
+
+
+def test_tsc_personalities():
+    assert isa.tsc_width(isa.TSC_FULL) == isa.WIDTH_ALL
+    assert isa.tsc_depth(isa.TSC_FULL) == isa.DEPTH_ALL
+    assert isa.tsc_width(isa.TSC_MCU) == isa.WIDTH_ONE
+    assert isa.tsc_depth(isa.TSC_MCU) == isa.DEPTH_WF0
+    with pytest.raises(ValueError):
+        isa.tsc_encode(3, 0)        # undefined width coding (Table 3)

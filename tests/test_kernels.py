@@ -1,0 +1,119 @@
+"""Pallas kernel sweeps: interpret-mode vs pure-jnp oracles across shapes,
+dtypes and activity masks (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dot_product import kernel as dpk, ref as dpr
+from repro.kernels.flash_attention import kernel as fak, ref as far
+from repro.kernels.wavefront_alu import kernel as wak, ref as war
+from repro.kernels.wavefront_matmul import kernel as wmk, ref as wmr
+
+RNG = np.random.default_rng(42)
+
+
+def randf(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# --- wavefront_alu ----------------------------------------------------------
+
+@pytest.mark.parametrize("t,l", [(8, 128), (32, 128), (64, 256)])
+@pytest.mark.parametrize("op", war.OPS)
+def test_wavefront_alu_shapes(t, l, op):
+    a, b, init = randf(t, l), randf(t, l), randf(t, l)
+    act = jnp.asarray(RNG.integers(0, 2, t // 8), jnp.int32)
+    got = wak.wavefront_alu(a, b, init, act, op, interpret=True)
+    exp = war.wavefront_alu_ref(a, b, init, act, op)
+    np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+
+@given(st.lists(st.integers(0, 1), min_size=4, max_size=4))
+@settings(max_examples=8, deadline=None)
+def test_wavefront_alu_mask_property(mask):
+    """Inactive tiles keep init exactly (eGPU write_enable semantics)."""
+    t, l = 32, 128
+    a, b, init = randf(t, l), randf(t, l), randf(t, l)
+    act = jnp.asarray(mask, jnp.int32)
+    got = wak.wavefront_alu(a, b, init, act, "add", interpret=True)
+    for i, m in enumerate(mask):
+        blk = got[i * 8:(i + 1) * 8]
+        ref_blk = (a + b if m else init)[i * 8:(i + 1) * 8]
+        np.testing.assert_array_equal(np.asarray(blk), np.asarray(ref_blk))
+
+
+# --- dot_product ------------------------------------------------------------
+
+@pytest.mark.parametrize("t,l", [(8, 128), (64, 128), (32, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dot_product_sweep(t, l, dtype):
+    a, b = randf(t, l, dtype=dtype), randf(t, l, dtype=dtype)
+    act = jnp.asarray(RNG.integers(0, 2, t // 8), jnp.int32)
+    got = dpk.dot_product(a, b, act, interpret=True)
+    exp = dpr.dot_product_ref(a, b, act)
+    np.testing.assert_allclose(got, exp, rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5)
+
+
+# --- wavefront_matmul -------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 256),
+                                   (384, 256, 128)])
+def test_wavefront_matmul_sweep(m, k, n):
+    a = randf(m, k) / np.sqrt(k)
+    b = randf(k, n) / np.sqrt(k)
+    act = jnp.asarray(RNG.integers(0, 2, m // 128), jnp.int32)
+    got = wmk.wavefront_matmul(a, b, act, interpret=True)
+    exp = wmr.wavefront_matmul_ref(a, b, act)
+    np.testing.assert_allclose(got, exp, atol=2e-5)
+
+
+def test_wavefront_matmul_all_inactive_is_zero():
+    a, b = randf(256, 128), randf(128, 128)
+    act = jnp.zeros(2, jnp.int32)
+    got = wmk.wavefront_matmul(a, b, act, interpret=True)
+    assert np.all(np.asarray(got) == 0)
+
+
+# --- flash_attention --------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk", [(128, 128), (256, 256), (128, 512)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(sq, sk, causal):
+    b, h, d = 2, 2, 64
+    q, k, v = randf(b, h, sq, d), randf(b, h, sk, d), randf(b, h, sk, d)
+    lens = jnp.asarray([sk, max(1, sk - 100)], jnp.int32)
+    got = fak.flash_attention(q, k, v, lens, causal, interpret=True)
+    exp = far.mha_ref(q, k, v, lens, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    b, h, sq, sk, d = 1, 2, 128, 256, 64
+    q = randf(b, h, sq, d, dtype=jnp.bfloat16)
+    k = randf(b, h, sk, d, dtype=jnp.bfloat16)
+    v = randf(b, h, sk, d, dtype=jnp.bfloat16)
+    got = fak.flash_attention(q, k, v, None, True, interpret=True)
+    exp = far.mha_ref(q, k, v, None, True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), atol=3e-2)
+
+
+@given(st.integers(1, 4))
+@settings(max_examples=4, deadline=None)
+def test_flash_attention_ragged_lengths_property(nblocks):
+    """Tokens beyond a request's length never influence its output —
+    the dynamic-wavefront guarantee at the kernel level."""
+    b, h, d = 2, 1, 64
+    sk = 128 * nblocks
+    q, k, v = randf(b, h, 128, d), randf(b, h, sk, d), randf(b, h, sk, d)
+    ln = jnp.asarray([sk // 2, sk], jnp.int32)
+    got1 = fak.flash_attention(q, k, v, ln, False, interpret=True)
+    # poison the masked tail of request 0: output must not change
+    k2 = k.at[0, :, sk // 2:].set(1e4)
+    v2 = v.at[0, :, sk // 2:].set(-1e4)
+    got2 = fak.flash_attention(q, k2, v2, ln, False, interpret=True)
+    np.testing.assert_allclose(np.asarray(got1[0]), np.asarray(got2[0]),
+                               atol=1e-5)

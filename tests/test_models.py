@@ -1,0 +1,187 @@
+"""Model-zoo tests: per-arch smoke (forward/train step, shapes, no NaNs)
+plus the deep consistency checks (prefill+decode == teacher-forced
+forward; chunked SSD == recurrence; parallel mLSTM == recurrence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import api, mamba2, xlstm
+from repro.models.common import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.num_patches, 1024)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_smoke_train_step_runs_and_is_finite(arch):
+    cfg = C.get_smoke(arch)
+    params = api.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(lambda p: api.loss(cfg, p, batch))(params)
+    assert jnp.isfinite(loss)
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0
+    # expected output shape via logits path
+    assert 0 < float(loss) < 2 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_smoke_decode_shapes_and_finite(arch):
+    cfg = C.get_smoke(arch)
+    params = api.init_params(KEY, cfg)
+    b = 2
+    cache = api.init_cache(cfg, b, max_len=64, enc_len=16)
+    lengths = jnp.zeros((b,), jnp.int32)
+    tok = jnp.zeros((b,), jnp.int32)
+    logits, cache, lengths = api.decode(cfg, params, cache, tok, lengths)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.all(lengths == 1))
+
+
+def test_full_configs_match_assignment():
+    """The exact architecture parameters from the brief."""
+    c = C.get("zamba2-1p2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.kv_heads, c.d_ff,
+            c.vocab, c.ssm_state) == (38, 2048, 32, 32, 8192, 32000, 64)
+    c = C.get("qwen3-moe-30b-a3b")
+    assert (c.n_layers, c.d_model, c.num_experts, c.top_k,
+            c.expert_d_ff, c.vocab) == (48, 2048, 128, 8, 768, 151936)
+    c = C.get("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.kv_heads, c.d_ff,
+            c.vocab) == (126, 16384, 128, 8, 53248, 128256)
+    c = C.get("phi3-medium-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.kv_heads, c.d_ff,
+            c.vocab) == (40, 5120, 40, 10, 17920, 100352)
+    c = C.get("seamless-m4t-large-v2")
+    assert (c.enc_layers, c.dec_layers, c.d_model, c.vocab) == \
+        (24, 24, 1024, 256206)
+    c = C.get("minitron-4b")
+    assert (c.n_layers, c.d_model, c.vocab) == (32, 3072, 256000)
+    c = C.get("yi-9b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (48, 4096, 11008, 64000)
+    c = C.get("granite-moe-3b-a800m")
+    assert (c.num_experts, c.top_k, c.expert_d_ff, c.vocab) == \
+        (40, 8, 512, 49155)
+    c = C.get("xlstm-350m")
+    assert (c.n_layers, c.d_model, c.vocab) == (24, 1024, 50304)
+    c = C.get("internvl2-2b")
+    assert (c.n_layers, c.d_model, c.vocab) == (24, 2048, 92553)
+
+
+def test_prefill_decode_matches_teacher_forcing_dense():
+    """KV-cache correctness: prefill P tokens then decode the rest, logits
+    must match the full forward pass."""
+    from repro.models import transformer
+    cfg = C.get_smoke("yi_9b").replace(dtype=jnp.float32)
+    params = api.init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)))
+    full_logits = transformer.forward(cfg, params, toks)
+    p = 5
+    logits_p, cache, lengths = transformer.prefill(cfg, params, toks[:, :p],
+                                                   max_len=16)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, p - 1]), atol=2e-4)
+    for i in range(p, 12):
+        logits_i, cache, lengths = transformer.decode_step(
+            cfg, params, cache, toks[:, i], lengths)
+        np.testing.assert_allclose(np.asarray(logits_i),
+                                   np.asarray(full_logits[:, i]), atol=2e-4,
+                                   err_msg=f"position {i}")
+
+
+def test_ssd_chunked_equals_recurrence():
+    """mamba2: chunked parallel training path == step-by-step decode."""
+    cfg = C.get_smoke("zamba2_1p2b").replace(dtype=jnp.float32)
+    p, _ = mamba2.ssd_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(5)
+    u = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_par, final = mamba2.ssd_apply(cfg, p, u, return_state=True)
+    st = jnp.zeros((2, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                   jnp.float32)
+    ys = []
+    for t in range(16):
+        y_t, st = mamba2.ssd_decode(cfg, p, u[:, t], st)
+        ys.append(y_t)
+    y_rec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(st), atol=3e-4)
+
+
+def test_mlstm_parallel_equals_recurrence():
+    cfg = C.get_smoke("xlstm_350m").replace(dtype=jnp.float32)
+    p, _ = xlstm.mlstm_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((2, 12, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    y_par = xlstm.mlstm_apply(cfg, p, x)
+    st = xlstm.mlstm_state(cfg, 2)
+    ys = []
+    for t in range(12):
+        y_t, st = xlstm.mlstm_decode(cfg, p, x[:, t], st)
+        ys.append(y_t)
+    y_rec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=3e-4)
+
+
+def test_zamba2_prefill_decode_consistency():
+    from repro.models import zamba2
+    cfg = C.get_smoke("zamba2_1p2b").replace(dtype=jnp.float32)
+    params = api.init_params(KEY, cfg)
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)))
+    full = zamba2.forward(cfg, params, toks)
+    logits_p, cache, lengths = zamba2.prefill(cfg, params, toks[:, :6],
+                                              max_len=16)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full[:, 5]), atol=5e-4)
+    logits_d, cache, lengths = zamba2.decode_step(cfg, params, cache,
+                                                  toks[:, 6], lengths)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full[:, 6]), atol=5e-4)
+
+
+def test_moe_expert_choice_routes_by_gate():
+    """High-gate tokens must reach their expert; output differs from zeros
+    and matches the dense oracle within routing-approximation error."""
+    from repro.models import moe
+    cfg = C.get_smoke("qwen3_moe_30b_a3b").replace(dtype=jnp.float32)
+    p, _ = moe.moe_params(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    y_ec = moe.moe_apply(cfg, p, x, mode="expert_choice")
+    y_td = moe.moe_apply(cfg, p, x, mode="token_dense")
+    assert jnp.any(jnp.abs(y_ec) > 0)
+    # both routings produce correlated outputs (cosine > 0.5)
+    a, b = y_ec.ravel(), y_td.ravel()
+    cos = jnp.dot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-9)
+    assert float(cos) > 0.5
+
+
+def test_long_context_flags():
+    assert C.get("zamba2-1p2b").supports_long_context()
+    assert C.get("xlstm-350m").supports_long_context()
+    assert not C.get("yi-9b").supports_long_context()
+    cells = list(C.cells())
+    assert len(cells) == 40
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8

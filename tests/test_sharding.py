@@ -1,0 +1,90 @@
+"""Partition-rule tests: fallbacks, divisibility on the production mesh
+(pure tree logic — no devices needed beyond the default)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.models import api
+from repro.sharding import partition
+
+
+class FakeMesh:
+    """Just enough of a Mesh for rule resolution (no devices)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+SINGLE = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_attention_sharding_ladder():
+    # phi3: 40 heads % 16 != 0 -> attention replicated (FFN carries TP)
+    r = partition.make_rules(C.get("phi3-medium-14b"), SINGLE)
+    assert r.physical("heads") is None
+    assert r.physical("hd") is None
+    # llama3: 128 q-heads divide but kv=8 does not -> q-heads only
+    r = partition.make_rules(C.get("llama3-405b"), SINGLE)
+    assert r.physical("heads") == "model" and r.physical("kv_heads") is None
+    # zamba2: 32/32 heads divide -> full head sharding
+    r = partition.make_rules(C.get("zamba2-1p2b"), SINGLE)
+    assert r.physical("heads") == "model"
+    assert r.physical("kv_heads") == "model"
+
+
+def test_expert_fallback():
+    r = partition.make_rules(C.get("qwen3-moe-30b-a3b"), SINGLE)
+    assert r.physical("experts") == "model"       # 128 % 16 == 0
+    assert r.physical("expert_ff") is None
+    r = partition.make_rules(C.get("granite-moe-3b-a800m"), SINGLE)
+    assert r.physical("experts") is None          # 40 % 16 != 0
+    assert r.physical("expert_ff") == "model"     # 512 % 16 == 0
+
+
+def test_vocab_fallback():
+    assert partition.make_rules(C.get("yi-9b"), SINGLE).physical("vocab") == "model"
+    for arch in ("granite-moe-3b-a800m", "seamless-m4t-large-v2",
+                 "internvl2-2b"):
+        assert partition.make_rules(C.get(arch), SINGLE).physical("vocab") is None
+
+
+def test_batch_axes_multi_pod():
+    r = partition.make_rules(C.get("yi-9b"), MULTI)
+    assert r.physical("batch") == ("pod", "data")
+    r = partition.make_rules(C.get("yi-9b"), SINGLE)
+    assert r.physical("batch") == ("data",)
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["16x16", "2x16x16"])
+def test_param_specs_divisible_for_all_archs(arch, mesh):
+    """Every parameter leaf's PartitionSpec must divide its shape on the
+    production mesh — the property that makes the dry-run compile."""
+    cfg = C.get(arch)
+    rules = partition.make_rules(cfg, mesh)
+    pspecs = partition.tree_pspecs(api.param_specs(cfg), rules)
+    shapes = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0),
+                                                    cfg))
+    flat_specs = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = jax.tree.leaves(shapes)
+    assert len(flat_specs) == len(flat_shapes)
+    for spec, leaf in zip(flat_specs, flat_shapes):
+        assert partition.check_divisibility(leaf.shape, spec, mesh), \
+            f"{arch}: {leaf.shape} not divisible by {spec}"
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_cache_specs_divisible(arch):
+    cfg = C.get(arch)
+    rules = partition.make_rules(cfg, SINGLE)
+    cspecs = partition.tree_pspecs(api.cache_specs(cfg), rules)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, 128, max_len=32768, enc_len=4096))
+    for spec, leaf in zip(
+            jax.tree.leaves(cspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(cache)):
+        assert partition.check_divisibility(leaf.shape, spec, SINGLE), \
+            f"{arch}: cache {leaf.shape} vs {spec}"
