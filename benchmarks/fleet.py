@@ -1,0 +1,181 @@
+"""Fleet throughput benchmark: serial single-core loop vs vmapped fleet.
+
+Builds a heterogeneous mix of jobs from the paper's benchmark suite
+(reduction, transpose, matmul, bitonic, FFT — mixed sizes, thread counts
+and TSC personalities), runs them
+
+  * serially, one ``run_program`` dispatch per job (the seed repo's only
+    mode), and
+  * through ``Fleet.submit``/``drain``, packed into vmapped batches,
+
+and reports jobs/sec for both plus the speedup.  Compiles are warmed
+before timing so the comparison is steady-state throughput.
+
+  PYTHONPATH=src python -m benchmarks.fleet --batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core import EGPUConfig, run_program  # noqa: E402
+from repro.fleet import Fleet  # noqa: E402
+from repro.programs import (build_bitonic, build_fft, build_matmul,  # noqa: E402
+                            build_reduction, build_transpose)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fleet_config() -> EGPUConfig:
+    """A small instance: big enough for the full suite at the benchmark
+    sizes, small enough that a 32-core batch state stays cache-resident
+    on the host."""
+    return EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                      alu_bits=32, shift_bits=32, predicate_levels=4,
+                      has_dot=True, has_invsqr=True)
+
+
+def build_jobs(cfg: EGPUConfig, n_jobs: int, mix: str = "suite"):
+    """A rotating heterogeneous job mix.
+
+    * ``light`` — short kernels (reductions, transpose, the predicated
+      ablation): the high-rate serving regime the fleet exists for, where
+      per-job dispatch overhead dominates a serial loop;
+    * ``suite`` — all five paper kernels at small sizes, step counts kept
+      comparable so lock-step cores finish together;
+    * ``large`` — long programs (matmul-16 dominates); stresses the
+      convoy-free packing.
+
+    Jobs differ in program, shared image, thread count and TSC
+    personalities (dynamic scalability) within every mix.
+    """
+    if mix == "light":
+        base = [
+            build_reduction(cfg, 16),
+            build_reduction(cfg, 32),
+            build_reduction(cfg, 32, use_dot=True),
+            build_reduction(cfg, 32, no_dynamic=True),
+            build_transpose(cfg, 16),
+        ]
+    elif mix == "suite":
+        base = [
+            build_bitonic(cfg, 16),
+            build_fft(cfg, 16),
+            build_bitonic(cfg, 32),
+            build_fft(cfg, 32),
+            build_matmul(cfg, 8),
+            build_reduction(cfg, 32),
+            build_reduction(cfg, 32, use_dot=True),
+            build_transpose(cfg, 16),
+        ]
+    elif mix == "large":
+        base = [
+            build_matmul(cfg, 16),
+            build_bitonic(cfg, 32),
+            build_fft(cfg, 32),
+            build_reduction(cfg, 32),
+        ]
+    else:
+        raise ValueError(f"unknown mix {mix!r}")
+    return [base[i % len(base)] for i in range(n_jobs)]
+
+
+def run_serial(jobs) -> float:
+    t0 = time.perf_counter()
+    for b in jobs:
+        run_program(b.image, shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    return time.perf_counter() - t0
+
+
+def run_fleet(cfg, jobs, batch) -> tuple[float, list]:
+    fleet = Fleet(cfg, batch_size=batch)
+    handles = [fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
+                            tag=b.name,
+                            weight=b.image.static_cycle_estimate())
+               for b in jobs]
+    t0 = time.perf_counter()
+    results = fleet.drain()
+    return time.perf_counter() - t0, [results[h] for h in handles]
+
+
+def bench_mix(cfg, mix: str, batch: int, rounds: int, repeats: int,
+              verify: bool) -> dict:
+    jobs = build_jobs(cfg, batch * rounds, mix)
+
+    # warm both compile caches (serial per-length runners + fleet runners)
+    run_serial(jobs[:len({b.name for b in jobs})])
+    _, results = run_fleet(cfg, jobs, batch)
+    if verify:
+        import numpy as np
+        from repro.core import machine as machine_mod
+        for b, r in list(zip(jobs, results))[:batch]:
+            st = run_program(b.image, shared_init=b.shared_init,
+                             tdx_dim=b.tdx_dim)
+            assert np.array_equal(machine_mod.shared_as_u32(st),
+                                  r.shared_u32()), b.name
+            assert int(st.cycles) == r.cycles, b.name
+            assert r.hazard_violations == 0, b.name
+
+    serial_s = min(run_serial(jobs) for _ in range(repeats))
+    fleet_s = min(run_fleet(cfg, jobs, batch)[0] for _ in range(repeats))
+    n = len(jobs)
+    return {
+        "mix": mix,
+        "batch": batch,
+        "jobs": n,
+        "serial_s": round(serial_s, 4),
+        "fleet_s": round(fleet_s, 4),
+        "serial_jobs_per_sec": round(n / serial_s, 1),
+        "fleet_jobs_per_sec": round(n / fleet_s, 1),
+        "speedup": round(serial_s / fleet_s, 2),
+        "job_mix": sorted({b.name for b in jobs}),
+    }
+
+
+def bench(batch: int = 32, rounds: int = 8, repeats: int = 2,
+          verify: bool = True, mixes: tuple = ("light", "suite", "large")
+          ) -> list[dict]:
+    cfg = fleet_config()
+    return [bench_mix(cfg, m, batch, rounds, repeats, verify) for m in mixes]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="jobs = rounds * batch (steady-state throughput)")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--mixes", default="light,suite,large")
+    ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
+                                                   "BENCH_fleet.json"))
+    args = ap.parse_args()
+
+    rows = bench(args.batch, args.rounds, args.repeats,
+                 verify=not args.no_verify,
+                 mixes=tuple(args.mixes.split(",")))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fleet/serial_{r['mix']}_{r['batch']},"
+              f"{1e6 * r['serial_s'] / r['jobs']:.1f},"
+              f"jobs_per_sec={r['serial_jobs_per_sec']}")
+        print(f"fleet/vmapped_{r['mix']}_{r['batch']},"
+              f"{1e6 * r['fleet_s'] / r['jobs']:.1f},"
+              f"jobs_per_sec={r['fleet_jobs_per_sec']};"
+              f"speedup={r['speedup']}x")
+    best = max(r["speedup"] for r in rows)
+    print(f"# best speedup at batch {args.batch}: {best}x", file=sys.stderr)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract), where
 ``derived`` carries the table-specific payload (cycles, vs-paper ratio,
-normalized cost, roofline terms ...).
+normalized cost, roofline terms ...), and persists every row to
+``BENCH_paper_tables.json`` at the repo root (plus ``BENCH_fleet.json``
+for the fleet throughput section) so the perf trajectory is tracked
+across PRs.
 
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --full     # + matmul-128 etc.
+  PYTHONPATH=src python -m benchmarks.run --no-fleet # skip fleet section
 """
 from __future__ import annotations
 
@@ -15,17 +19,24 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
 from benchmarks import paper_tables  # noqa: E402
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ROWS: list[dict] = []
 
 
 def emit(name, us, derived):
     print(f"{name},{us},{derived}")
+    _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-fleet", action="store_true")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -83,6 +94,29 @@ def main() -> None:
                  f"dom={row['dominant']};comp={row['t_compute_s']:.2e};"
                  f"mem={row['t_memory_s']:.2e};coll={row['t_collective_s']:.2e};"
                  f"useful={row['useful_flops_ratio']:.2f}")
+
+    # persist the paper tables before the fleet section so a fleet
+    # failure can't discard the rows already collected
+    with open(os.path.join(_REPO_ROOT, "BENCH_paper_tables.json"), "w") as f:
+        json.dump(_ROWS, f, indent=2)
+
+    # Fleet throughput (batched multi-core engine vs serial loop)
+    if not args.no_fleet:
+        from benchmarks import fleet as fleet_bench
+        rounds = 8 if args.full else 2
+        fleet_rows = fleet_bench.bench(batch=32, rounds=rounds,
+                                       mixes=("light", "suite"))
+        for r in fleet_rows:
+            emit(f"fleet/{r['mix']}_batch{r['batch']}",
+                 round(1e6 * r["fleet_s"] / r["jobs"], 1),
+                 f"jobs_per_sec={r['fleet_jobs_per_sec']};"
+                 f"serial_jobs_per_sec={r['serial_jobs_per_sec']};"
+                 f"speedup={r['speedup']}x")
+        with open(os.path.join(_REPO_ROOT, "BENCH_fleet.json"), "w") as f:
+            json.dump(fleet_rows, f, indent=2)
+        with open(os.path.join(_REPO_ROOT,
+                               "BENCH_paper_tables.json"), "w") as f:
+            json.dump(_ROWS, f, indent=2)   # now including the fleet rows
 
 
 if __name__ == "__main__":

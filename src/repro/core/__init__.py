@@ -6,7 +6,7 @@ from .isa import (Op, Typ, Instr, OpClass, encode_word, decode_word, iw_bits,
 from .assembler import Asm, ProgramImage, schedule
 from .machine import (MachineState, init_state, shared_as_f32, shared_as_u32,
                       shared_as_i32, profile)
-from .executor import run_program
+from .executor import make_step, pad_image, run_program
 from .area_model import resources, Resources
 from . import cost, area_model
 
@@ -16,5 +16,6 @@ __all__ = [
     "decode_word", "iw_bits", "TSC_FULL", "TSC_WF0", "TSC_CPU", "TSC_MCU",
     "PERSONALITIES", "Asm", "ProgramImage", "schedule", "MachineState",
     "init_state", "shared_as_f32", "shared_as_u32", "shared_as_i32",
-    "profile", "run_program", "resources", "Resources", "cost", "area_model",
+    "profile", "run_program", "make_step", "pad_image", "resources",
+    "Resources", "cost", "area_model",
 ]

@@ -40,38 +40,43 @@ _HZ_PRED = -1
 
 # ---------------------------------------------------------------------------
 # Constant per-opcode tables (built once per config, baked into the jaxpr).
+#
+# All per-opcode metadata lives in ONE (NUM_OPCODES, 11) int32 table so the
+# step function fetches it with a single dynamic row gather — under the
+# vmapped fleet every separate gather is a separate (batched) HLO op, and
+# the step is op-dispatch bound on CPU, not FLOP bound.
 # ---------------------------------------------------------------------------
+
+# table columns
+(_TC_SCALAR, _TC_READS_RA, _TC_READS_RB, _TC_READS_RD, _TC_WRITES_RD,
+ _TC_LAT, _TC_CLS, _TC_PER_WF0) = range(8)          # per_wf spans cols 7..10
+
+# program-image columns (see pad_image)
+_PF_OP, _PF_TYP, _PF_RD, _PF_RA, _PF_RB, _PF_IMM, _PF_TSC = range(7)
+PROG_FIELDS = ("op", "typ", "rd", "ra", "rb", "imm", "tsc")
+
 
 def _tables(cfg: EGPUConfig):
     n = isa.NUM_OPCODES
-    scalar = np.zeros((n,), np.bool_)
-    reads_ra = np.zeros((n,), np.bool_)
-    reads_rb = np.zeros((n,), np.bool_)
-    reads_rd = np.zeros((n,), np.bool_)
-    writes_rd = np.zeros((n,), np.bool_)
-    latency = np.zeros((n,), np.int32)
-    opclass = np.zeros((n,), np.int32)
-    per_wf = np.ones((n, 4), np.int32)  # [op, width_code] issue cycles per wf
+    t = np.zeros((n, 11), np.int32)
+    t[:, _TC_PER_WF0:] = 1
     from . import cost as _cost
 
     for op in Op:
-        scalar[op] = op in isa.SCALAR_OPS
-        reads_ra[op] = op in isa.READS_RA
-        reads_rb[op] = op in isa.READS_RB
-        reads_rd[op] = op in isa.READS_RD
-        writes_rd[op] = op in isa.REG_WRITE_OPS
-        latency[op] = _cost.result_latency(op, cfg)
-        opclass[op] = isa.OP_CLASS[op]
+        t[op, _TC_SCALAR] = op in isa.SCALAR_OPS
+        t[op, _TC_READS_RA] = op in isa.READS_RA
+        t[op, _TC_READS_RB] = op in isa.READS_RB
+        t[op, _TC_READS_RD] = op in isa.READS_RD
+        t[op, _TC_WRITES_RD] = op in isa.REG_WRITE_OPS
+        t[op, _TC_LAT] = _cost.result_latency(op, cfg)
+        t[op, _TC_CLS] = isa.OP_CLASS[op]
         for wc in range(4):
             width = isa.WIDTH_LANES[wc]
             if op == Op.LOD:
-                per_wf[op, wc] = -(-width // cfg.cost.sp_read_ports)
+                t[op, _TC_PER_WF0 + wc] = -(-width // cfg.cost.sp_read_ports)
             elif op == Op.STO:
-                per_wf[op, wc] = -(-width // cfg.write_ports)
-    return dict(scalar=jnp.asarray(scalar), reads_ra=jnp.asarray(reads_ra),
-                reads_rb=jnp.asarray(reads_rb), reads_rd=jnp.asarray(reads_rd),
-                writes_rd=jnp.asarray(writes_rd), latency=jnp.asarray(latency),
-                opclass=jnp.asarray(opclass), per_wf=jnp.asarray(per_wf))
+                t[op, _TC_PER_WF0 + wc] = -(-width // cfg.write_ports)
+    return jnp.asarray(t)
 
 
 def _cdiv(a, b):
@@ -154,14 +159,63 @@ def _mul24(a_u32, b_u32, signed):
 
 
 # ---------------------------------------------------------------------------
-# Runner
+# Step function
 # ---------------------------------------------------------------------------
 
 _PAD = 64  # programs are padded to a multiple of this to share compiles
 
 
-@functools.lru_cache(maxsize=32)
-def _make_runner(cfg: EGPUConfig, prog_len: int):
+@functools.lru_cache(maxsize=64)
+def make_step(cfg: EGPUConfig, prog_len: int,
+              ops_subset: frozenset | None = None, *,
+              flat_dispatch: bool = False, check_hazards: bool = True,
+              collect_stats: bool = True):
+    """Build the per-instruction semantics for one eGPU core.
+
+    Returns ``(step, running)``: ``step(state, prog, act=None) ->
+    (state, sto_idx, sto_val)`` executes exactly one instruction
+    (``prog`` is the packed ``(prog_len, 7)`` image from
+    :func:`pad_image`), and ``running(state) -> bool`` is the continue
+    predicate.  The split from the ``while_loop`` driver is what lets the
+    same semantics power both :func:`run_program` (single core) and the
+    vmapped fleet engine (:mod:`repro.fleet.engine`).
+
+    The state update is *flat*: the per-opcode ``lax.switch`` only selects
+    the value an instruction produces (a ``(T,)`` vector plus an IF.cc
+    condition), and every architectural structure — register file,
+    predicate/loop/call stacks, PC — is then updated exactly once with
+    mask-gated one-hot selects.  Under ``jax.vmap`` a switch over a
+    batched opcode lowers to "execute every branch, select one", and a
+    batched scatter is pathologically slow on the CPU backend, so the
+    step avoids scatters entirely:
+
+    * small structures (hazard rows, stacks, stat counters) use one-hot
+      ``where`` selects, which fuse;
+    * the one real scatter — the STO write to shared memory — is
+      *deferred*: ``step`` returns ``(state, sto_idx, sto_val)`` and the
+      driver applies it (the fleet driver as a single flattened scatter
+      for the whole batch, gated on "any core is storing this cycle").
+
+    ``act`` (bool, default True) gates every write, so a halted core
+    no-ops without a second freeze pass over the state.
+
+    ``ops_subset`` (a frozenset of opcode ints) specializes the dispatch to
+    the instruction working set of the program(s) actually being run —
+    opcodes outside the subset map to a dummy branch.  The fleet packs the
+    union of its batch's opcodes here, shrinking the vmapped
+    all-branches dispatch several-fold.
+
+    ``flat_dispatch`` replaces the ``lax.switch`` with a nested-``where``
+    chain: correct in both drivers, but chosen per driver for speed — the
+    switch wins single-core (one branch executes), the chain wins vmapped
+    (everything fuses into a few kernels instead of per-branch launches).
+
+    ``check_hazards=False`` / ``collect_stats=False`` drop the RAW hazard
+    checker / the Fig. 6 instruction-mix counters from the compiled step.
+    Neither affects the architectural results (registers, shared memory,
+    cycles, PC trace) — the real eGPU has no hazard hardware or counters —
+    so throughput-oriented fleet runs can shed their cost.
+    """
     T = cfg.max_threads
     R = cfg.regs_per_thread
     S = cfg.shared_words
@@ -172,17 +226,25 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
     wf = tid // cfg.num_sps
     width_lanes = jnp.asarray(isa.WIDTH_LANES, _I32)
 
-    def body(carry):
-        st: MachineState = carry[0]
-        prog = carry[1]
+    branch_ops = sorted(ops_subset) if ops_subset is not None \
+        else list(range(isa.NUM_OPCODES))
+    remap_np = np.full((isa.NUM_OPCODES,), len(branch_ops), np.int32)
+    for i, o in enumerate(branch_ops):
+        remap_np[o] = i
+    remap = jnp.asarray(remap_np)
+
+    def step(st: MachineState, prog, act=None):
+        gate = jnp.bool_(True) if act is None else act
         pc = st.pc
-        op = prog["op"][pc]
-        typ = prog["typ"][pc]
-        rd = prog["rd"][pc]
-        ra = prog["ra"][pc]
-        rb = prog["rb"][pc]
-        imm = prog["imm"][pc]
-        tsc = prog["tsc"][pc]
+        row = prog[pc]                   # one gather for all seven fields
+        op = row[_PF_OP]
+        typ = row[_PF_TYP]
+        rd = row[_PF_RD]
+        ra = row[_PF_RA]
+        rb = row[_PF_RB]
+        imm = row[_PF_IMM]
+        tsc = row[_PF_TSC]
+        trow = tables[op]                # one gather for all opcode metadata
 
         width_code = (tsc >> 2) & 3
         depth_code = tsc & 3
@@ -190,8 +252,9 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
         wfs = jnp.stack([_I32(1), w_rt, jnp.maximum(1, _cdiv(w_rt, 2)),
                          jnp.maximum(1, _cdiv(w_rt, 4))])[depth_code]
         lanes = width_lanes[width_code]
-        per_wf_c = tables["per_wf"][op, width_code]
-        is_scalar = tables["scalar"][op]
+        per_wf_c = trow[_TC_PER_WF0 + width_code]
+        is_scalar = trow[_TC_SCALAR] == 1
+        writes_rd = trow[_TC_WRITES_RD] == 1
         issue = jnp.where(is_scalar, _I32(1), per_wf_c * wfs)
 
         # --- active masks ------------------------------------------------
@@ -201,69 +264,53 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
                           axis=1)
         mask = tsc_mask & pred_ok
 
-        # --- operand reads --------------------------------------------------
-        rav = lax.dynamic_index_in_dim(st.regs, ra, axis=1, keepdims=False)
-        rbv = lax.dynamic_index_in_dim(st.regs, rb, axis=1, keepdims=False)
-        rdv = lax.dynamic_index_in_dim(st.regs, rd, axis=1, keepdims=False)
+        # --- operand reads (one gather) ----------------------------------
+        srcs = jnp.stack([ra, rb, rd])
+        vals = st.regs[:, srcs]          # (T, 3)
+        rav, rbv, rdv = vals[:, 0], vals[:, 1], vals[:, 2]
 
-        # --- hazard checker (RAW) ---------------------------------------
-        def constraint(row):
-            p_start, p_per_wf, p_wfs, p_lat = row[0], row[1], row[2], row[3]
+        # --- hazard checker (RAW), vectorised over the five read slots ---
+        hz = st.hazard
+        violated = jnp.bool_(False)
+        if check_hazards:
+            rows = jnp.concatenate([hz[srcs], hz[R:R + 2]])  # ra/rb/rd/mem/pred
+            p_start, p_per_wf = rows[:, 0], rows[:, 1]
+            p_wfs, p_lat = rows[:, 2], rows[:, 3]
             k_max = jnp.minimum(p_wfs, wfs) - 1
             k = jnp.where(p_per_wf > per_wf_c, k_max, 0)
-            return p_start + p_per_wf * (k + 1) - 1 + p_lat - per_wf_c * k
+            cons = p_start + p_per_wf * (k + 1) - 1 + p_lat - per_wf_c * k
+            pred_reads = (~is_scalar) if cfg.has_predicates \
+                else jnp.bool_(False)
+            flags = jnp.stack([trow[_TC_READS_RA] == 1,
+                               trow[_TC_READS_RB] == 1,
+                               trow[_TC_READS_RD] == 1, op == Op.LOD,
+                               pred_reads])
+            neg_inf = _I32(-(1 << 30))
+            need = jnp.max(jnp.where(flags, cons, neg_inf))
+            violated = (~is_scalar | (op == Op.LOD)) & (need > st.cycles)
 
-        hz = st.hazard
-        neg_inf = _I32(-(1 << 30))
-        need = neg_inf
-        need = jnp.maximum(need, jnp.where(tables["reads_ra"][op],
-                                           constraint(hz[ra]), neg_inf))
-        need = jnp.maximum(need, jnp.where(tables["reads_rb"][op],
-                                           constraint(hz[rb]), neg_inf))
-        need = jnp.maximum(need, jnp.where(tables["reads_rd"][op],
-                                           constraint(hz[rd]), neg_inf))
-        need = jnp.maximum(need, jnp.where(op == Op.LOD,
-                                           constraint(hz[_HZ_MEM]), neg_inf))
-        if cfg.has_predicates:
-            need = jnp.maximum(
-                need, jnp.where(~is_scalar, constraint(hz[_HZ_PRED]), neg_inf))
-        violated = (~is_scalar | (op == Op.LOD)) & (need > st.cycles)
-
-        new_row = jnp.stack([st.cycles, per_wf_c, wfs, tables["latency"][op]])
-        hz = jnp.where(tables["writes_rd"][op],
-                       hz.at[rd].set(new_row), hz)
-        hz = jnp.where(op == Op.STO, hz.at[_HZ_MEM].set(new_row), hz)
-        hz = jnp.where(op >= Op.IF_EQ, hz.at[_HZ_PRED].set(new_row), hz)
+            # writer bookkeeping: rd / shared-memory / predicate rows as one
+            # fused one-hot select (scatters are slow on the vmapped path)
+            new_row = jnp.stack([st.cycles, per_wf_c, wfs, trow[_TC_LAT]])
+            none = _I32(-9)
+            ridx = jnp.arange(R + 2, dtype=_I32)
+            hrow = ((ridx == jnp.where(writes_rd, rd, none)) |
+                    (ridx == jnp.where(op == Op.STO, _I32(R + 2 + _HZ_MEM),
+                                       none)) |
+                    (ridx == jnp.where(op >= Op.IF_EQ,
+                                       _I32(R + 2 + _HZ_PRED), none))) & gate
+            hz = jnp.where(hrow[:, None], new_row[None, :], hz)
 
         # --- semantic helpers ---------------------------------------------
         alu_mask = _U32((1 << cfg.alu_bits) - 1 if cfg.alu_bits < 32
                         else 0xFFFFFFFF)
 
-        def wr(st_, val, m=None):
-            m = mask if m is None else m
-            val = val.astype(_U32)
-            if cfg.alu_bits < 32:
-                pass  # masking applied by int ops individually
-            old = lax.dynamic_index_in_dim(st_.regs, rd, axis=1,
-                                           keepdims=False)
-            col = jnp.where(m, val, old)
-            return st_._replace(regs=lax.dynamic_update_slice(
-                st_.regs, col[:, None], (jnp.int32(0), rd)))
-
         def imask(v):  # integer ALU precision (16-bit ALU configs)
             return v.astype(_U32) & alu_mask
 
-        def adv(st_):
-            return st_._replace(pc=st_.pc + 1)
-
         signed = typ == Typ.I32
 
-        # --- branch functions (one per opcode) -----------------------------
-        def b_alu(f):
-            def g(st_):
-                return adv(wr(st_, f()))
-            return g
-
+        # --- per-opcode value functions ------------------------------------
         def shift_amt():
             return rbv & _U32(cfg.alu_bits - 1 if cfg.shift_bits > 1 else 1)
 
@@ -335,152 +382,215 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
         def f_fmax(): return _bits(jnp.maximum(_f(rav), _f(rbv)))
         def f_fmin(): return _bits(jnp.minimum(_f(rav), _f(rbv)))
 
-        # memory
-        def b_lod(st_):
-            addr = _i(rav) + imm
-            safe = jnp.clip(addr, 0, S - 1)
-            vals = st_.shared[safe]
-            return adv(wr(st_, vals))
+        # memory / immediates / thread ids.  LODI/TDX/TDY results are
+        # produced by the integer datapath, so a 16-bit ALU clips them to
+        # ``alu_bits`` like any other integer result; LOD is *not* masked
+        # (the shared memory is a full 32-bit datapath) and neither are the
+        # FP units (bitcast results bypass the integer ALU entirely).
+        addr = _i(rav) + imm
 
-        def b_sto(st_):
-            addr = _i(rav) + imm
-            ok = mask & (addr >= 0) & (addr < S)
-            idx = jnp.where(ok, addr, S)  # out-of-range -> dropped
-            shared = st_.shared.at[idx].set(rdv, mode="drop")
-            return adv(st_._replace(shared=shared))
+        def f_lod():
+            return st.shared[jnp.clip(addr, 0, S - 1)]
 
-        def b_lodi(st_):
-            return adv(wr(st_, jnp.broadcast_to(_u(imm), (T,))))
+        def f_lodi():
+            return imask(jnp.broadcast_to(_u(imm), (T,)))
 
-        def b_tdx(st_):
-            return adv(wr(st_, _u(tid % st_.tdx_dim)))
+        def f_tdx(): return imask(_u(tid % st.tdx_dim))
+        def f_tdy(): return imask(_u(tid // st.tdx_dim))
 
-        def b_tdy(st_):
-            return adv(wr(st_, _u(tid // st_.tdx_dim)))
+        # extension units: DOT/SUM land in thread 0's Rd.  The reduction
+        # order is fixed (sequential over wavefronts, pairwise tree within
+        # the 16-lane wavefront, like the hardware's accumulator) so the
+        # single-core and vmapped fleet paths produce bit-identical sums —
+        # ``jnp.sum`` may associate differently under vmap.
+        def _det_sum(v):
+            m = v.reshape(T // 16, 16)
+            acc = m[0]
+            for i in range(1, T // 16):
+                acc = acc + m[i]
+            for s in (8, 4, 2, 1):
+                acc = acc[:s] + acc[s:2 * s]
+            return acc[0]
 
-        # extension units: result lands in thread 0's Rd
-        def _scalar_wr(st_, value_f32):
-            m0 = tid == 0
-            return adv(wr(st_, jnp.broadcast_to(_bits(value_f32), (T,)), m0))
+        def f_dot():
+            s = _det_sum(jnp.where(mask, _f(rav) * _f(rbv), 0.0))
+            return jnp.broadcast_to(_bits(s), (T,))
 
-        def b_dot(st_):
-            s = jnp.sum(jnp.where(mask, _f(rav) * _f(rbv), 0.0))
-            return _scalar_wr(st_, s)
+        def f_sum():
+            s = _det_sum(jnp.where(mask, _f(rav), 0.0))
+            return jnp.broadcast_to(_bits(s), (T,))
 
-        def b_sum(st_):
-            s = jnp.sum(jnp.where(mask, _f(rav), 0.0))
-            return _scalar_wr(st_, s)
+        def f_invsqr(): return _bits(lax.rsqrt(_f(rav)))
 
-        def b_invsqr(st_):
-            return adv(wr(st_, _bits(lax.rsqrt(_f(rav)))))
-
-        # control
-        def b_jmp(st_): return st_._replace(pc=imm)
-
-        def b_jsr(st_):
-            cs = st_.cstack.at[st_.csp].set(st_.pc + 1, mode="drop")
-            return st_._replace(cstack=cs, csp=st_.csp + 1, pc=imm)
-
-        def b_rts(st_):
-            sp = st_.csp - 1
-            return st_._replace(csp=sp, pc=st_.cstack[sp])
-
-        def b_init(st_):
-            lc = st_.lctr.at[st_.lsp].set(imm, mode="drop")
-            return st_._replace(lctr=lc, lsp=st_.lsp + 1, pc=st_.pc + 1)
-
-        def b_loop(st_):
-            sp = st_.lsp - 1
-            c = st_.lctr[sp]
-            taken = c > 0
-            lc = st_.lctr.at[sp].set(c - 1)
-            return st_._replace(
-                lctr=lc,
-                lsp=jnp.where(taken, st_.lsp, sp),
-                pc=jnp.where(taken, _I32(imm), st_.pc + 1))
-
-        def b_stop(st_):
-            return st_._replace(halted=jnp.bool_(True), pc=st_.pc + 1)
-
-        def b_nop(st_): return adv(st_)
-
-        # predicates
-        def _push(st_, cond):
-            oh = (lvl[None, :] == st_.pdepth[:, None]) & tsc_mask[:, None]
-            ps = jnp.where(oh, cond[:, None], st_.pstack)
-            pd = st_.pdepth + jnp.where(tsc_mask & (st_.pdepth < D), 1, 0)
-            return adv(st_._replace(pstack=ps, pdepth=pd))
-
-        def b_if(cond_fn):
-            def g(st_):
-                return _push(st_, cond_fn())
-            return g
-
-        def c_int(cmp_s, cmp_u):
-            return jnp.where(signed, cmp_s(_i(rav), _i(rbv)),
-                             cmp_u(rav, rbv))
-
-        def b_else(st_):
-            oh = (lvl[None, :] == (st_.pdepth[:, None] - 1)) \
-                & tsc_mask[:, None] & (st_.pdepth[:, None] > 0)
-            return adv(st_._replace(pstack=st_.pstack ^ oh))
-
-        def b_endif(st_):
-            pd = st_.pdepth - jnp.where(tsc_mask & (st_.pdepth > 0), 1, 0)
-            return adv(st_._replace(pdepth=pd))
-
+        # --- the opcode dispatch -------------------------------------------
+        # ``spec[op] = (value_fn | None, cond_fn | None)``: the write value
+        # an instruction produces and (for IF.cc) its condition.  Control
+        # ops carry no value function (their register write is gated off by
+        # the ``writes_rd`` table anyway).
         fa, fb = _f(rav), _f(rbv)
-        branches = [
-            b_alu(f_add), b_alu(f_sub), b_alu(f_negi), b_alu(f_absi),
-            b_alu(f_mul16lo), b_alu(f_mul16hi), b_alu(f_mul24lo),
-            b_alu(f_mul24hi),
-            b_alu(f_and), b_alu(f_or), b_alu(f_xor), b_alu(f_not),
-            b_alu(f_cnot), b_alu(f_bvs),
-            b_alu(f_shl), b_alu(f_shr),
-            b_alu(f_pop), b_alu(f_max), b_alu(f_min),
-            b_alu(f_fadd), b_alu(f_fsub), b_alu(f_fneg), b_alu(f_fabs),
-            b_alu(f_fmul), b_alu(f_fmax), b_alu(f_fmin),
-            b_lod, b_sto, b_lodi, b_tdx, b_tdy,
-            b_dot, b_sum, b_invsqr,
-            b_jmp, b_jsr, b_rts, b_loop, b_init, b_stop, b_nop,
-            b_if(lambda: rav == rbv),                       # IF_EQ
-            b_if(lambda: rav != rbv),                       # IF_NE
-            b_if(lambda: _i(rav) < _i(rbv)),                # IF_LT
-            b_if(lambda: rav < rbv),                        # IF_LO
-            b_if(lambda: _i(rav) <= _i(rbv)),               # IF_LE
-            b_if(lambda: rav <= rbv),                       # IF_LS
-            b_if(lambda: _i(rav) > _i(rbv)),                # IF_GT
-            b_if(lambda: rav > rbv),                        # IF_HI
-            b_if(lambda: _i(rav) >= _i(rbv)),               # IF_GE
-            b_if(lambda: rav >= rbv),                       # IF_HS
-            b_if(lambda: fa == fb),                         # IF_FEQ
-            b_if(lambda: fa != fb),                         # IF_FNE
-            b_if(lambda: fa < fb),                          # IF_FLT
-            b_if(lambda: fa <= fb),                         # IF_FLE
-            b_if(lambda: fa > fb),                          # IF_FGT
-            b_if(lambda: fa >= fb),                         # IF_FGE
-            b_if(lambda: rav == 0),                         # IF_Z
-            b_if(lambda: rav != 0),                         # IF_NZ
-            b_else, b_endif,
-        ]
-        assert len(branches) == isa.NUM_OPCODES
+        no_cond = jnp.zeros((T,), jnp.bool_)
+        spec: list = [None] * isa.NUM_OPCODES
+        for o, f in [(Op.ADD, f_add), (Op.SUB, f_sub), (Op.NEG, f_negi),
+                     (Op.ABS, f_absi), (Op.MUL16LO, f_mul16lo),
+                     (Op.MUL16HI, f_mul16hi), (Op.MUL24LO, f_mul24lo),
+                     (Op.MUL24HI, f_mul24hi), (Op.AND, f_and), (Op.OR, f_or),
+                     (Op.XOR, f_xor), (Op.NOT, f_not), (Op.CNOT, f_cnot),
+                     (Op.BVS, f_bvs), (Op.SHL, f_shl), (Op.SHR, f_shr),
+                     (Op.POP, f_pop), (Op.MAX, f_max), (Op.MIN, f_min),
+                     (Op.FADD, f_fadd), (Op.FSUB, f_fsub), (Op.FNEG, f_fneg),
+                     (Op.FABS, f_fabs), (Op.FMUL, f_fmul), (Op.FMAX, f_fmax),
+                     (Op.FMIN, f_fmin), (Op.LOD, f_lod), (Op.LODI, f_lodi),
+                     (Op.TDX, f_tdx), (Op.TDY, f_tdy), (Op.DOT, f_dot),
+                     (Op.SUM, f_sum), (Op.INVSQR, f_invsqr)]:
+            spec[o] = (f, None)
+        for o, f in [(Op.IF_EQ, lambda: rav == rbv),
+                     (Op.IF_NE, lambda: rav != rbv),
+                     (Op.IF_LT, lambda: _i(rav) < _i(rbv)),
+                     (Op.IF_LO, lambda: rav < rbv),
+                     (Op.IF_LE, lambda: _i(rav) <= _i(rbv)),
+                     (Op.IF_LS, lambda: rav <= rbv),
+                     (Op.IF_GT, lambda: _i(rav) > _i(rbv)),
+                     (Op.IF_HI, lambda: rav > rbv),
+                     (Op.IF_GE, lambda: _i(rav) >= _i(rbv)),
+                     (Op.IF_HS, lambda: rav >= rbv),
+                     (Op.IF_FEQ, lambda: fa == fb),
+                     (Op.IF_FNE, lambda: fa != fb),
+                     (Op.IF_FLT, lambda: fa < fb),
+                     (Op.IF_FLE, lambda: fa <= fb),
+                     (Op.IF_FGT, lambda: fa > fb),
+                     (Op.IF_FGE, lambda: fa >= fb),
+                     (Op.IF_Z, lambda: rav == 0),
+                     (Op.IF_NZ, lambda: rav != 0)]:
+            spec[o] = (None, f)
 
-        st2 = lax.switch(op, branches, st)
-        cls = tables["opclass"][op]
-        st2 = st2._replace(
-            cycles=st.cycles + issue,
-            steps=st.steps + 1,
+        if flat_dispatch:
+            # nested-where chain over the working set: every elementwise
+            # value fuses into a handful of kernels.  A vmapped lax.switch
+            # executes all branches anyway (batched opcodes), but as
+            # separate computations + select_n — many more kernel launches.
+            value, ifcond = rav, no_cond
+            for o in branch_ops:
+                if spec[o] is None:
+                    continue
+                vf, cf = spec[o]
+                if vf is not None:
+                    value = jnp.where(op == o, vf().astype(_U32), value)
+                if cf is not None:
+                    ifcond = jnp.where(op == o, cf(), ifcond)
+        else:
+            # real control flow: one branch executes per instruction
+            def to_branch(entry):
+                if entry is None or entry[0] is None and entry[1] is None:
+                    return lambda _: (rav, no_cond)
+                vf, cf = entry
+                if vf is not None:
+                    return lambda _: (vf().astype(_U32), no_cond)
+                return lambda _: (rav, cf())
+
+            active = [to_branch(spec[o]) for o in branch_ops] \
+                + [to_branch(None)]
+            value, ifcond = lax.switch(remap[op], active, _I32(0))
+
+        # --- register writeback (one column update, mask-gated; a batched
+        # dynamic_update_slice lowers to an in-place column write) ----------
+        ext0 = (op == Op.DOT) | (op == Op.SUM)   # write thread 0 only
+        wmask = jnp.where(ext0, tid == 0, mask) & writes_rd & gate
+        col = jnp.where(wmask, value, rdv)
+        regs = lax.dynamic_update_slice(st.regs, col[:, None],
+                                        (jnp.int32(0), rd))
+
+        # --- shared-memory write (STO): deferred to the driver -------------
+        sto_ok = (op == Op.STO) & mask & (addr >= 0) & (addr < S) & gate
+        sidx = jnp.where(sto_ok, addr, S)   # out-of-range/inactive -> dropped
+
+        # --- predicate stacks ----------------------------------------------
+        is_if = ((op >= Op.IF_EQ) & (op <= Op.IF_NZ)) & gate
+        is_else = (op == Op.ELSE) & gate
+        is_endif = (op == Op.ENDIF) & gate
+        oh_push = (lvl[None, :] == st.pdepth[:, None]) & tsc_mask[:, None]
+        ps_push = jnp.where(oh_push, ifcond[:, None], st.pstack)
+        pd_push = st.pdepth + jnp.where(tsc_mask & (st.pdepth < D), 1, 0)
+        oh_else = (lvl[None, :] == (st.pdepth[:, None] - 1)) \
+            & tsc_mask[:, None] & (st.pdepth[:, None] > 0)
+        pd_pop = st.pdepth - jnp.where(tsc_mask & (st.pdepth > 0), 1, 0)
+        pstack = jnp.where(is_if, ps_push,
+                           jnp.where(is_else, st.pstack ^ oh_else, st.pstack))
+        pdepth = jnp.where(is_if, pd_push,
+                           jnp.where(is_endif, pd_pop, st.pdepth))
+
+        # --- sequencer: call/loop stacks and PC ----------------------------
+        is_jmp = op == Op.JMP
+        is_jsr = (op == Op.JSR) & gate
+        is_rts = (op == Op.RTS) & gate
+        is_loop = (op == Op.LOOP) & gate
+        is_init = (op == Op.INIT) & gate
+        is_stop = (op == Op.STOP) & gate
+
+        cm = (jnp.arange(st.cstack.shape[0], dtype=_I32) == st.csp) & is_jsr
+        cstack = jnp.where(cm, pc + 1, st.cstack)
+        csp = st.csp + jnp.where(is_jsr, 1, 0) - jnp.where(is_rts, 1, 0)
+        rts_pc = st.cstack[st.csp - 1]
+
+        lsp1 = st.lsp - 1
+        ltop = st.lctr[lsp1]
+        taken = ltop > 0
+        lidx = jnp.arange(st.lctr.shape[0], dtype=_I32)
+        lctr = jnp.where((lidx == st.lsp) & is_init, imm,
+                         jnp.where((lidx == lsp1) & is_loop, ltop - 1,
+                                   st.lctr))
+        lsp = jnp.where(is_init, st.lsp + 1,
+                        jnp.where(is_loop & ~taken, lsp1, st.lsp))
+
+        pc1 = jnp.where(gate, pc + 1, pc)
+        pc_next = jnp.where(
+            (is_jmp & gate) | is_jsr, imm,
+            jnp.where(is_rts, rts_pc,
+                      jnp.where(is_loop & taken, imm, pc1)))
+
+        stat_cycles, stat_instrs = st.stat_cycles, st.stat_instrs
+        if collect_stats:
+            cls = trow[_TC_CLS]
+            sm = (jnp.arange(isa.NUM_OP_CLASSES, dtype=_I32) == cls) & gate
+            stat_cycles = st.stat_cycles + jnp.where(sm, issue, 0)
+            stat_instrs = st.stat_instrs + jnp.where(sm, 1, 0)
+
+        st2 = st._replace(
+            regs=regs, pstack=pstack, pdepth=pdepth,
+            lctr=lctr, lsp=lsp, cstack=cstack, csp=csp,
+            pc=pc_next,
+            cycles=st.cycles + jnp.where(gate, issue, 0),
+            steps=st.steps + jnp.where(gate, 1, 0),
+            halted=st.halted | is_stop,
             hazard=hz,
-            hazard_violations=st.hazard_violations + violated.astype(_I32),
-            stat_cycles=st.stat_cycles.at[cls].add(issue),
-            stat_instrs=st.stat_instrs.at[cls].add(1),
+            hazard_violations=st.hazard_violations
+            + (violated & gate).astype(_I32),
+            stat_cycles=stat_cycles, stat_instrs=stat_instrs,
         )
-        return (st2, prog)
+        return st2, sidx, rdv
 
-    def cond(carry):
-        st = carry[0]
+    def running(st: MachineState):
         return (~st.halted) & (st.steps < cfg.max_steps) & \
             (st.pc >= 0) & (st.pc < prog_len)
+
+    return step, running
+
+
+# ---------------------------------------------------------------------------
+# Single-core driver
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _make_runner(cfg: EGPUConfig, prog_len: int):
+    step, running = make_step(cfg, prog_len)
+
+    def body(carry):
+        st, prog = carry
+        st2, sidx, rdv = step(st, prog)
+        shared = st2.shared.at[sidx].set(rdv, mode="drop")
+        return (st2._replace(shared=shared), prog)
+
+    def cond(carry):
+        return running(carry[0])
 
     @jax.jit
     def run(prog, st):
@@ -490,26 +600,39 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
     return run
 
 
+def padded_length(n: int) -> int:
+    """Instruction count rounded up to the shared ``_PAD`` compile grid."""
+    return n + (-n) % _PAD
+
+
+def pad_image(image: ProgramImage, prog_len: int | None = None):
+    """Pack a program into a ``(padded_len, 7)`` int32 array of decoded
+    fields (column order :data:`PROG_FIELDS`), padded with STOP rows.
+
+    Returns ``(packed, padded_len)``; ``padded_len`` is ``prog_len`` if
+    given, else the next multiple of ``_PAD`` — the executor/fleet compile
+    cache is keyed on that length, so padding to the shared grid reuses
+    compiles.
+    """
+    n = image.n
+    length = prog_len if prog_len is not None else padded_length(n)
+    if length < n:
+        raise ValueError(f"prog_len {length} < program length {n}")
+    packed = np.zeros((length, 7), np.int32)
+    packed[n:, _PF_OP] = int(Op.STOP)
+    for col, field in enumerate(PROG_FIELDS):
+        packed[:n, col] = getattr(image, field)
+    return packed, length
+
+
 def run_program(image: ProgramImage, state: MachineState | None = None,
                 **init_kw) -> MachineState:
     """Execute an assembled program to completion."""
     cfg = image.cfg
     if state is None:
         state = init_state(cfg, threads=image.threads_active, **init_kw)
-    n = image.n
-    pad = (-n) % _PAD
-    stop_row = np.full((pad,), int(Op.STOP), np.int32)
-    zeros = np.zeros((pad,), np.int32)
-    prog = {
-        "op": jnp.asarray(np.concatenate([image.op, stop_row])),
-        "typ": jnp.asarray(np.concatenate([image.typ, zeros])),
-        "rd": jnp.asarray(np.concatenate([image.rd, zeros])),
-        "ra": jnp.asarray(np.concatenate([image.ra, zeros])),
-        "rb": jnp.asarray(np.concatenate([image.rb, zeros])),
-        "imm": jnp.asarray(np.concatenate([image.imm, zeros])),
-        "tsc": jnp.asarray(np.concatenate([image.tsc, zeros])),
-    }
-    runner = _make_runner(cfg, n + pad)
-    out = runner(prog, state)
+    packed, length = pad_image(image)
+    runner = _make_runner(cfg, length)
+    out = runner(jnp.asarray(packed), state)
     out.cycles.block_until_ready()
     return out

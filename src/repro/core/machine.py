@@ -41,6 +41,27 @@ class MachineState(NamedTuple):
     hazard_violations: jnp.ndarray  # () int32
 
 
+def pack_shared_init(shared_init, shared_words: int) -> np.ndarray:
+    """Coerce a shared-memory image to uint32 words (FP32 views FP bits)."""
+    buf = np.asarray(shared_init)
+    if buf.dtype.kind == "f":
+        buf = buf.astype(np.float32).view(np.uint32)
+    buf = buf.astype(np.uint32).ravel()
+    if buf.size > shared_words:
+        raise ValueError(
+            f"shared_init ({buf.size} words) exceeds {shared_words}")
+    return buf
+
+
+def hazard_init(regs_per_thread: int) -> np.ndarray:
+    """Initial hazard-checker rows: every slot "written long ago"."""
+    hz = np.zeros((regs_per_thread + 2, 4), np.int32)
+    hz[:, 0] = -(1 << 30)
+    hz[:, 1] = 1
+    hz[:, 2] = 1
+    return hz
+
+
 def init_state(cfg: EGPUConfig, *, threads: int | None = None,
                tdx_dim: int = 16,
                shared_init: np.ndarray | None = None) -> MachineState:
@@ -52,17 +73,9 @@ def init_state(cfg: EGPUConfig, *, threads: int | None = None,
     D = max(1, cfg.predicate_levels)
     shared = jnp.zeros((S,), jnp.uint32)
     if shared_init is not None:
-        buf = np.asarray(shared_init)
-        if buf.dtype.kind == "f":
-            buf = buf.astype(np.float32).view(np.uint32)
-        buf = buf.astype(np.uint32).ravel()
-        if buf.size > S:
-            raise ValueError(f"shared_init ({buf.size} words) exceeds {S}")
+        buf = pack_shared_init(shared_init, S)
         shared = shared.at[: buf.size].set(jnp.asarray(buf))
-    hz = np.zeros((R + 2, 4), np.int32)
-    hz[:, 0] = -(1 << 30)  # "written long ago"
-    hz[:, 1] = 1
-    hz[:, 2] = 1
+    hz = hazard_init(R)
     return MachineState(
         regs=jnp.zeros((T, R), jnp.uint32),
         shared=shared,

@@ -1,0 +1,27 @@
+"""Fleet engine: batched multi-core eGPU execution.
+
+Simulates N homogeneous eGPU cores in lock-step by ``jax.vmap``-ing the
+single-core step function (:func:`repro.core.executor.make_step`) over a
+batch of :class:`~repro.core.machine.MachineState`s, and schedules
+heterogeneous jobs — different programs, per-job runtime thread counts
+(the paper's dynamic scalability), per-job shared-memory images — into
+fixed-shape batches that execute in one XLA dispatch.
+
+This is the multi-core regime of the paper's follow-up work ("A 950 MHz
+SIMT Soft Processor" scales the same microarchitecture to arrays of
+cores) and what throughput studies against IP cores need.
+
+    from repro.fleet import Fleet
+    fleet = Fleet(cfg, batch_size=32)
+    h = fleet.submit(image, shared_init=data, threads=256)
+    results = fleet.drain()
+    results[h].shared_f32()
+"""
+from .api import Fleet, run_jobs
+from .engine import fleet_run, stack_states, unstack_state
+from .scheduler import FleetJob, FleetScheduler, FleetStats, JobResult
+
+__all__ = [
+    "Fleet", "run_jobs", "fleet_run", "stack_states", "unstack_state",
+    "FleetJob", "FleetScheduler", "FleetStats", "JobResult",
+]

@@ -1,0 +1,75 @@
+"""User-facing fleet API.
+
+    fleet = Fleet(cfg, batch_size=32)
+    h0 = fleet.submit(image_a, shared_init=data_a, threads=512)
+    h1 = fleet.submit(image_b, shared_init=data_b, threads=64)
+    results = fleet.drain()          # one vmapped dispatch per batch
+    results[h0].shared_f32(), results[h1].cycles
+
+``Fleet`` is a thin facade over :class:`FleetScheduler`; ``run_jobs`` is
+the one-shot convenience for a fixed job list.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..core.assembler import ProgramImage
+from ..core.config import EGPUConfig
+from .scheduler import FleetScheduler, FleetStats, JobResult
+
+
+class Fleet:
+    """A homogeneous array of eGPU cores behind a job queue."""
+
+    def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
+                 pack_by_cost: bool = True, validate: bool = True):
+        self._sched = FleetScheduler(cfg, batch_size,
+                                     pack_by_cost=pack_by_cost,
+                                     validate=validate)
+
+    @property
+    def cfg(self) -> EGPUConfig:
+        return self._sched.cfg
+
+    @property
+    def batch_size(self) -> int:
+        return self._sched.batch_size
+
+    @property
+    def pending(self) -> int:
+        return self._sched.pending
+
+    @property
+    def stats(self) -> FleetStats:
+        return self._sched.stats
+
+    def submit(self, image: ProgramImage, shared_init=None, *,
+               threads: int | None = None, tdx_dim: int = 16,
+               tag: Any = None, weight: float | None = None) -> int:
+        """Queue one program execution; returns a result handle.
+
+        ``weight`` is an optional relative cost hint used to pack
+        similar-cost jobs into the same lock-step batch.
+        """
+        return self._sched.submit(image, shared_init, threads=threads,
+                                  tdx_dim=tdx_dim, tag=tag, weight=weight)
+
+    def drain(self) -> dict[int, JobResult]:
+        """Run all queued jobs in fixed-shape vmapped batches."""
+        return self._sched.drain()
+
+
+def run_jobs(cfg: EGPUConfig, jobs: list[dict], *,
+             batch_size: int = 32) -> list[JobResult]:
+    """One-shot: run a list of job dicts, results in submission order.
+
+    Each job dict holds ``image`` plus optional ``shared_init``,
+    ``threads``, ``tdx_dim``, ``tag`` (the :meth:`Fleet.submit` keywords).
+    """
+    fleet = Fleet(cfg, batch_size)
+    handles = [fleet.submit(j["image"], j.get("shared_init"),
+                            threads=j.get("threads"),
+                            tdx_dim=j.get("tdx_dim", 16),
+                            tag=j.get("tag")) for j in jobs]
+    results = fleet.drain()
+    return [results[h] for h in handles]

@@ -1,0 +1,152 @@
+"""The vmapped fleet runner: N cores, one ``while_loop``, one dispatch.
+
+The single-core executor advances one instruction per ``while_loop``
+iteration with real control flow (``lax.switch`` takes one branch).  The
+fleet runner vmaps that same step function over a leading core axis:
+
+* the loop condition becomes "any core still running";
+* a halted (or faulted/out-of-bounds) core no-ops: its step result is
+  discarded leaf-wise, freezing its state — cycles, stats and shared
+  memory included — so per-job results are bit-identical to what
+  :func:`repro.core.executor.run_program` produces for that job alone;
+* all cores share one configuration (homogeneous fleet) and one padded
+  program length, but each core carries its *own* program image, runtime
+  thread count and shared memory, so the batch is heterogeneous in every
+  dynamically-scalable axis of the paper.
+
+The step function is built for this path (``make_step`` with
+``flat_dispatch=True``): per-opcode values come from a fused
+nested-``where`` chain over the batch's instruction working set, small
+state structures update via one-hot selects, and the one true scatter
+(STO to shared memory) is applied here as a single flattened batch
+scatter gated on "any core stores this cycle" — batched scatters are the
+slowest op on the CPU backend by an order of magnitude.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.assembler import ProgramImage
+from ..core.config import EGPUConfig
+from ..core.executor import make_step, pad_image, padded_length
+from ..core.isa import Op
+from ..core.machine import MachineState, init_state
+
+
+def stack_states(states: list[MachineState]) -> MachineState:
+    """Stack per-core states along a new leading fleet axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(batched: MachineState, i: int) -> MachineState:
+    """Extract core ``i``'s state from a batched fleet state."""
+    return jax.tree_util.tree_map(lambda x: x[i], batched)
+
+
+#: instruction steps per ``while_loop`` trip.  Unrolling amortises the
+#: loop-boundary buffer copies XLA inserts around the carried state; the
+#: act-gating in the step makes overshooting a core's STOP harmless.
+_UNROLL = 8
+
+
+@functools.lru_cache(maxsize=32)
+def _make_fleet_runner(cfg: EGPUConfig, prog_len: int,
+                       ops_subset: frozenset | None = None,
+                       unroll: int = _UNROLL, validate: bool = True):
+    step, running = make_step(cfg, prog_len, ops_subset,
+                              flat_dispatch=True, check_hazards=validate,
+                              collect_stats=validate)
+    S = cfg.shared_words
+    vstep = jax.vmap(step)
+    vrunning = jax.vmap(running)
+
+    def cond(carry):
+        return jnp.any(vrunning(carry[0]))
+
+    def substep(states, progs):
+        act = vrunning(states)          # halted cores no-op via the gate
+        sts, sidx, rdv = vstep(states, progs, act)
+
+        # the deferred STO writes of the whole batch as ONE flat scatter,
+        # skipped entirely on cycles where no core is storing (a batched
+        # per-core scatter is the single slowest op on the CPU backend)
+        n = sidx.shape[0]
+        core = jnp.arange(n, dtype=jnp.int32)[:, None]
+        flat = jnp.where(sidx < S, core * S + sidx, n * S).ravel()
+
+        def do_store(sh):
+            return sh.ravel().at[flat].set(rdv.ravel(),
+                                           mode="drop").reshape(n, S)
+
+        shared = lax.cond(jnp.any(sidx < S), do_store, lambda sh: sh,
+                          sts.shared)
+        return sts._replace(shared=shared)
+
+    def body(carry):
+        states, progs = carry
+        for _ in range(unroll):
+            states = substep(states, progs)
+        return (states, progs)
+
+    @jax.jit
+    def run(progs, states):
+        final, _ = lax.while_loop(cond, body, (states, progs))
+        return final
+
+    return run
+
+
+def _pack_programs(images: list[ProgramImage], prog_len: int | None = None):
+    """Pad every image to one shared length, stack to ``(N, L, 7)``, and
+    collect the batch's instruction working set (for switch
+    specialization)."""
+    if prog_len is None:
+        prog_len = max(padded_length(im.n) for im in images)
+    packed = np.stack([pad_image(im, prog_len)[0] for im in images])
+    ops = frozenset(int(o) for im in images for o in np.unique(im.op))
+    ops |= {int(Op.STOP)}           # padding rows
+    return jnp.asarray(packed), prog_len, ops
+
+
+def fleet_run(images: list[ProgramImage],
+              states: list[MachineState] | MachineState | None = None, *,
+              prog_len: int | None = None,
+              init_kw: list[dict] | None = None,
+              validate: bool = True) -> MachineState:
+    """Execute one program per core, all cores in one vmapped dispatch.
+
+    ``images`` must share a configuration (homogeneous cores).  ``states``
+    — a list of per-core states or an already-batched state — or per-job
+    ``init_kw`` dicts for :func:`init_state` supply each core's shared
+    memory, runtime thread count and TDX grid.  Returns the batched final
+    :class:`MachineState`; slice per-core results out with
+    :func:`unstack_state`.
+
+    ``validate=False`` drops the hazard checker and the instruction-mix
+    counters from the compiled step (architectural results unchanged) —
+    use for throughput runs.
+    """
+    if not images:
+        raise ValueError("empty fleet")
+    cfg = images[0].cfg
+    for im in images[1:]:
+        if im.cfg != cfg:
+            raise ValueError("fleet cores must share one EGPUConfig")
+    if states is None:
+        init_kw = init_kw or [{}] * len(images)
+        states = [init_state(cfg, threads=im.threads_active, **kw)
+                  for im, kw in zip(images, init_kw)]
+    if isinstance(states, list):
+        if len(states) != len(images):
+            raise ValueError("one state per core required")
+        states = stack_states(states)
+    progs, length, ops = _pack_programs(images, prog_len)
+    runner = _make_fleet_runner(cfg, length, ops, validate=validate)
+    out = runner(progs, states)
+    out.cycles.block_until_ready()
+    return out

@@ -1,0 +1,15 @@
+"""Version-compatibility shims shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams``, named ``TPUCompilerParams`` on jax < 0.5."""
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams — incompatible jax version")
+    return cls(**kw)

@@ -1,0 +1,35 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+``from _hyp import given, settings, st`` works whether or not hypothesis
+is installed; without it the ``@given`` tests are collected but skipped
+(the strategy stubs are never executed).  Deterministic tests in the
+same modules keep running either way.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:          # pragma: no cover - CI installs it
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements-dev.txt)"
+            )(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Stub: strategy objects are only consumed by @given at run time,
+        which the skip marker prevents."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

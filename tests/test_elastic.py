@@ -7,9 +7,11 @@ import textwrap
 
 
 def _run(code: str):
+    # generous: a cold jax import plus hundreds of virtual host devices
+    # takes several minutes on small CI/container machines
     return subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=420,
+        capture_output=True, text=True, timeout=1200,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root"},
         cwd="/root/repo")

@@ -4,7 +4,7 @@ One shared small config keeps jit cache warm across the suite.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (Asm, EGPUConfig, Op, Typ, init_state, run_program)
 from repro.core import machine as machine_mod

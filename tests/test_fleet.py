@@ -1,0 +1,184 @@
+"""Fleet-engine tests: batched multi-core execution vs sequential runs.
+
+The contract under test: a fleet of N homogeneous cores running
+heterogeneous jobs in ONE vmapped dispatch produces results bit-identical
+to N sequential ``run_program`` calls — shared memory, cycle counts,
+step counts, instruction-mix profile, and zero hazard violations.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Asm, EGPUConfig, Typ, run_program
+from repro.core import machine as machine_mod
+from repro.fleet import Fleet, FleetScheduler, fleet_run, run_jobs, \
+    unstack_state
+from repro.programs import (build_bitonic, build_fft, build_matmul,
+                            build_reduction, build_transpose)
+
+CFG = EGPUConfig(max_threads=64, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+
+def _suite():
+    """The full paper suite + dynamic-scalability variants (per-job
+    thread counts differ: 16..64)."""
+    return [
+        build_reduction(CFG, 32),
+        build_reduction(CFG, 32, use_dot=True),
+        build_reduction(CFG, 32, no_dynamic=True),
+        build_reduction(CFG, 64),
+        build_transpose(CFG, 16),
+        build_matmul(CFG, 16),
+        build_bitonic(CFG, 32),
+        build_fft(CFG, 32),
+    ]
+
+
+def test_32_core_fleet_bit_identical_to_sequential():
+    """Acceptance: >= 32 heterogeneous jobs, one vmapped dispatch per
+    batch, bit-identical shared memory / cycles / steps, zero hazards."""
+    benches = _suite()
+    jobs = [benches[i % len(benches)] for i in range(32)]
+    fleet = Fleet(CFG, batch_size=32)
+    handles = [fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
+                            tag=b.name) for b in jobs]
+    results = fleet.drain()
+    assert fleet.stats.batches == 1          # one dispatch for all 32
+    assert fleet.stats.jobs == 32
+    for b, h in zip(jobs, handles):
+        st = run_program(b.image, shared_init=b.shared_init,
+                         tdx_dim=b.tdx_dim)
+        r = results[h]
+        assert np.array_equal(machine_mod.shared_as_u32(st),
+                              r.shared_u32()), b.name
+        assert int(st.cycles) == r.cycles, b.name
+        assert int(st.steps) == r.steps, b.name
+        assert r.hazard_violations == 0, b.name
+        assert r.profile() == machine_mod.profile(st), b.name
+
+
+def test_fleet_oracles_still_hold():
+    """The fleet results also satisfy each benchmark's NumPy oracle
+    (checked through each bench's own result view, fed from the fleet's
+    shared memory)."""
+    benches = _suite()
+    results = run_jobs(CFG, [dict(image=b.image, shared_init=b.shared_init,
+                                  tdx_dim=b.tdx_dim) for b in benches])
+
+    class _View:
+        def __init__(self, shared_u32):
+            self.shared = shared_u32
+
+    for b, r in zip(benches, results):
+        exp = np.asarray(b.oracle(b.shared_init))
+        got = np.asarray(b.result_view(_View(r.shared_u32())))
+        if exp.dtype.kind == "f":
+            assert np.allclose(got, exp, atol=b.atol, rtol=b.rtol), b.name
+        else:
+            assert np.array_equal(got, exp), b.name
+
+
+def test_mixed_thread_counts_and_personalities():
+    """One batch mixing runtime thread counts (static scalability) and
+    per-instruction TSC personalities (dynamic scalability)."""
+    def prog(tsc, value):
+        a = Asm(CFG)
+        a.tdx(1)
+        a.lodi(2, value, tsc=tsc)
+        a.sto(2, 1, 0, tsc=tsc)
+        a.stop()
+        return a
+
+    cases = [("full", 11, 64), ("full", 12, 32), ("wf0", 13, 64),
+             ("cpu", 14, 32), ("mcu", 15, 16), ("quarter", 16, 48)]
+    fleet = Fleet(CFG, batch_size=8)
+    handles = []
+    images = []
+    for tsc, value, threads in cases:
+        img = prog(tsc, value).assemble(threads_active=threads)
+        images.append(img)
+        handles.append(fleet.submit(img, threads=threads, tdx_dim=threads,
+                                    tag=tsc))
+    results = fleet.drain()
+    for (tsc, value, threads), img, h in zip(cases, images, handles):
+        st = run_program(img, tdx_dim=threads)
+        r = results[h]
+        assert np.array_equal(machine_mod.shared_as_u32(st),
+                              r.shared_u32()), tsc
+        assert int(st.cycles) == r.cycles, tsc
+        assert r.hazard_violations == 0
+
+
+def test_scheduler_packs_partial_batches():
+    """5 jobs at batch 4 -> two dispatches, filler slots excluded."""
+    b = build_reduction(CFG, 32)
+    sched = FleetScheduler(CFG, batch_size=4)
+    hs = [sched.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+          for _ in range(5)]
+    assert sched.pending == 5
+    results = sched.drain()
+    assert sched.pending == 0
+    assert sched.stats.batches == 2
+    assert sched.stats.pad_slots == 3
+    assert sorted(results) == sorted(hs)
+    ref = run_program(b.image, shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    for h in hs:
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
+    assert sched.stats.jobs == 5
+    assert sched.stats.jobs_per_sec > 0
+
+
+def test_fleet_run_low_level_unstack():
+    """engine.fleet_run returns the batched state; unstack slices cores."""
+    b1 = build_reduction(CFG, 32)
+    b2 = build_transpose(CFG, 16)
+    final = fleet_run([b1.image, b2.image],
+                      init_kw=[dict(shared_init=b1.shared_init,
+                                    tdx_dim=b1.tdx_dim),
+                               dict(shared_init=b2.shared_init,
+                                    tdx_dim=b2.tdx_dim)])
+    for i, b in enumerate((b1, b2)):
+        st = run_program(b.image, shared_init=b.shared_init,
+                         tdx_dim=b.tdx_dim)
+        core = unstack_state(final, i)
+        assert np.array_equal(np.asarray(core.shared),
+                              machine_mod.shared_as_u32(st))
+        assert int(core.cycles) == int(st.cycles)
+
+
+def test_fleet_rejects_mismatched_config():
+    other = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2)
+    a = Asm(other)
+    a.stop()
+    img = a.assemble()
+    fleet = Fleet(CFG)
+    with pytest.raises(ValueError):
+        fleet.submit(img)
+
+
+def test_alu16_masks_lodi_tdx_tdy():
+    """16-bit ALU configs clip LODI/TDX/TDY through the integer-ALU width
+    mask (the once-dead ``alu_bits < 32`` path in the executor)."""
+    cfg16 = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2,
+                       alu_bits=16, shift_bits=16)
+    a = Asm(cfg16)
+    a.lodi(1, -1)          # sign-extends to 0xFFFFFFFF on a 32-bit ALU
+    a.tdx(2)
+    a.sto(1, 2, 0)
+    a.stop()
+    st = run_program(a.assemble(threads_active=32), tdx_dim=32)
+    got = machine_mod.shared_as_u32(st)[:32]
+    assert (got == 0xFFFF).all()       # clipped to 16 bits, not 0xFFFFFFFF
+
+    # ... and arithmetic on the masked value stays mod-2^16
+    a = Asm(cfg16)
+    a.lodi(1, -1)
+    a.lodi(2, 1)
+    a.add(3, 1, 2, typ=Typ.U32)
+    a.tdx(4)
+    a.sto(3, 4, 0)
+    a.stop()
+    st = run_program(a.assemble(threads_active=32), tdx_dim=32)
+    assert machine_mod.shared_as_u32(st)[0] == 0     # 0xFFFF + 1 == 0

@@ -1,6 +1,6 @@
 """ISA-level tests: instruction count, word packing, TSC coding."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import isa
 from repro.core.isa import Instr, Op, Typ

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.dot_product import kernel as dpk, ref as dpr
 from repro.kernels.flash_attention import kernel as fak, ref as far
@@ -53,8 +53,11 @@ def test_dot_product_sweep(t, l, dtype):
     act = jnp.asarray(RNG.integers(0, 2, t // 8), jnp.int32)
     got = dpk.dot_product(a, b, act, interpret=True)
     exp = dpr.dot_product_ref(a, b, act)
+    # f32 tolerance: kernel and reference accumulate t*l (up to 16K)
+    # products in different orders, so ulp-level drift scales with the
+    # cancellation in the sum
     np.testing.assert_allclose(got, exp, rtol=2e-2 if dtype == jnp.bfloat16
-                               else 1e-5)
+                               else 1e-4)
 
 
 # --- wavefront_matmul -------------------------------------------------------
