@@ -154,10 +154,14 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--mixes", default="light,suite,large")
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI pass: one light round, no json")
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_fleet.json"))
     args = ap.parse_args()
 
+    if args.smoke:
+        args.rounds, args.repeats, args.mixes = 1, 1, "light"
     rows = bench(args.batch, args.rounds, args.repeats,
                  verify=not args.no_verify,
                  mixes=tuple(args.mixes.split(",")))
@@ -172,6 +176,8 @@ def main() -> None:
               f"speedup={r['speedup']}x")
     best = max(r["speedup"] for r in rows)
     print(f"# best speedup at batch {args.batch}: {best}x", file=sys.stderr)
+    if args.smoke:
+        return              # CI pass: don't clobber the tracked numbers
     with open(args.json, "w") as f:
         json.dump(rows, f, indent=2)
     print(f"# wrote {args.json}", file=sys.stderr)

@@ -10,6 +10,7 @@ across PRs.
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --full     # + matmul-128 etc.
   PYTHONPATH=src python -m benchmarks.run --no-fleet # skip fleet section
+  PYTHONPATH=src python -m benchmarks.run --smoke    # quick CI pass
 """
 from __future__ import annotations
 
@@ -28,16 +29,30 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _ROWS: list[dict] = []
 
 
+_PERSIST = True          # --smoke disables writing the tracked BENCH files
+
+
 def emit(name, us, derived):
     print(f"{name},{us},{derived}")
     _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
+
+
+def _dump(path, obj):
+    if not _PERSIST:
+        return
+    with open(os.path.join(_REPO_ROOT, path), "w") as f:
+        json.dump(obj, f, indent=2)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-fleet", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest sizes / fewest rounds, for CI")
     args = ap.parse_args()
+    global _PERSIST
+    _PERSIST = not args.smoke
 
     print("name,us_per_call,derived")
 
@@ -52,7 +67,7 @@ def main() -> None:
              f"alm={row['alms']};ff={row['ffs']}")
 
     # Table 7
-    sizes = (32, 64, 128) if args.full else (32, 64)
+    sizes = (32,) if args.smoke else (32, 64, 128) if args.full else (32, 64)
     for row in paper_tables.table7(sizes):
         emit(f"table7/{row['bench']}_{row['n']}_{row['variant']}",
              row["time_us"],
@@ -62,7 +77,8 @@ def main() -> None:
              f"normalized={row['normalized_vs_nios']}")
 
     # Table 8
-    sizes8 = (32, 64, 128, 256) if args.full else (32, 64)
+    sizes8 = (32,) if args.smoke \
+        else (32, 64, 128, 256) if args.full else (32, 64)
     for row in paper_tables.table8(sizes8):
         emit(f"table8/{row['bench']}_{row['n']}_{row['variant']}",
              row["time_us"],
@@ -78,8 +94,9 @@ def main() -> None:
         emit(f"fig6/{row['bench']}_{row['n']}", 0, payload)
 
     # Dynamic-scalability ablation
-    for row in paper_tables.dynamic_scaling((32, 64) if not args.full
-                                            else (32, 64, 128)):
+    for row in paper_tables.dynamic_scaling(
+            (32,) if args.smoke else (32, 64) if not args.full
+            else (32, 64, 128)):
         emit(f"dynamic_scaling/reduction_{row['n']}", 0,
              f"tsc={row['tsc_cycles']};predicated={row['predicated_cycles']};"
              f"speedup={row['dynamic_speedup']}x")
@@ -97,13 +114,12 @@ def main() -> None:
 
     # persist the paper tables before the fleet section so a fleet
     # failure can't discard the rows already collected
-    with open(os.path.join(_REPO_ROOT, "BENCH_paper_tables.json"), "w") as f:
-        json.dump(_ROWS, f, indent=2)
+    _dump("BENCH_paper_tables.json", _ROWS)
 
     # Fleet throughput (batched multi-core engine vs serial loop)
     if not args.no_fleet:
         from benchmarks import fleet as fleet_bench
-        rounds = 8 if args.full else 2
+        rounds = 8 if args.full else 1 if args.smoke else 2
         fleet_rows = fleet_bench.bench(batch=32, rounds=rounds,
                                        mixes=("light", "suite"))
         for r in fleet_rows:
@@ -112,11 +128,19 @@ def main() -> None:
                  f"jobs_per_sec={r['fleet_jobs_per_sec']};"
                  f"serial_jobs_per_sec={r['serial_jobs_per_sec']};"
                  f"speedup={r['speedup']}x")
-        with open(os.path.join(_REPO_ROOT, "BENCH_fleet.json"), "w") as f:
-            json.dump(fleet_rows, f, indent=2)
-        with open(os.path.join(_REPO_ROOT,
-                               "BENCH_paper_tables.json"), "w") as f:
-            json.dump(_ROWS, f, indent=2)   # now including the fleet rows
+        _dump("BENCH_fleet.json", fleet_rows)
+        _dump("BENCH_paper_tables.json", _ROWS)  # + the fleet rows
+
+    # Block compiler vs interpreter (single core; + fleet tiers unless
+    # --no-fleet, which skips every fleet-engine benchmark)
+    from benchmarks import compiled as compiled_bench
+    comp = compiled_bench.bench(smoke=args.smoke,
+                                include_fleet=not args.no_fleet)
+    for name, us, derived in compiled_bench.rows_csv(comp):
+        emit(name, us, derived)
+    if not args.no_fleet:       # only persist the complete two-section file
+        _dump("BENCH_compiled.json", comp)
+    _dump("BENCH_paper_tables.json", _ROWS)      # + the compiled-tier rows
 
 
 if __name__ == "__main__":

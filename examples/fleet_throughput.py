@@ -68,7 +68,8 @@ def main() -> None:
     s = fleet.stats
     print(f"fleet : {len(jobs)} jobs in {fleet_s * 1e3:7.1f} ms "
           f"({len(jobs) / fleet_s:7.1f} jobs/s) across {s.batches} "
-          f"dispatches ({s.pad_slots} filler slots; first-run compile "
+          f"dispatches ({s.compiled_jobs} jobs on the block-compiled "
+          f"tier, {s.pad_slots} filler slots; first-run compile "
           f"took {compile_s:.1f} s)")
     print(f"serial: {len(jobs)} jobs in {serial_s * 1e3:7.1f} ms "
           f"({len(jobs) / serial_s:7.1f} jobs/s)")

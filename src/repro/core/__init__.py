@@ -7,8 +7,10 @@ from .assembler import Asm, ProgramImage, schedule
 from .machine import (MachineState, init_state, shared_as_f32, shared_as_u32,
                       shared_as_i32, profile)
 from .executor import make_step, pad_image, run_program
+from .blockc import (BlockCompileError, CompiledProgram, compile_program,
+                     run_compiled)
 from .area_model import resources, Resources
-from . import cost, area_model
+from . import cost, area_model, semantics
 
 __all__ = [
     "EGPUConfig", "CostParams", "table4_configs", "table5_configs",
@@ -17,5 +19,6 @@ __all__ = [
     "PERSONALITIES", "Asm", "ProgramImage", "schedule", "MachineState",
     "init_state", "shared_as_f32", "shared_as_u32", "shared_as_i32",
     "profile", "run_program", "make_step", "pad_image", "resources",
-    "Resources", "cost", "area_model",
+    "Resources", "cost", "area_model", "semantics", "BlockCompileError",
+    "CompiledProgram", "compile_program", "run_compiled",
 ]

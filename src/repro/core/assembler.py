@@ -321,7 +321,7 @@ def _writes(ins: Instr, cfg: EGPUConfig) -> list:
         ws.append(ins.rd)
     if o == Op.STO:
         ws.append(Asm._VMEM)
-    if o.value >= Op.IF_EQ:
+    if o in isa.PRED_WRITE_OPS:
         ws.append(Asm._VPRED)
     return ws
 

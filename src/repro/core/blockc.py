@@ -1,0 +1,626 @@
+"""The eGPU basic-block compiler: specialize execution to the static program.
+
+The interpreter (:mod:`repro.core.executor`) pays full per-instruction
+dispatch cost — a program-row gather, an opcode-metadata gather, and a
+switch/where-chain over the working set — on every ``while_loop`` trip.
+But every :class:`ProgramImage` is completely static, and the eGPU ISA
+has **no data-dependent branches**: JMP/JSR/LOOP targets and INIT loop
+counts are all immediates, so the entire execution path (and with it the
+cycle count, the instruction-mix profile and the RAW hazard checker) is
+decodable ahead of time.  This module exploits that:
+
+* the program is decomposed at control-flow boundaries into **basic
+  blocks** (leaders: entry, branch/call targets, return addresses,
+  fall-throughs past a sequencer op);
+* each block is traced with opcodes/registers/immediates/TSC fields as
+  *Python constants* — no program gather, no opcode-table gather, no
+  switch, no hazard machinery — so the whole block fuses into one
+  straight-line XLA computation (per-opcode value semantics come from
+  :mod:`repro.core.semantics`, shared with the interpreter);
+* a small ``lax.while_loop`` drives block to block through a
+  ``lax.switch`` over the block entries, carrying only the architectural
+  state;
+* hazards, cycles-at-issue and the final hazard bookkeeping are computed
+  **once, statically** by simulating the sequencer on the host
+  (:func:`_simulate`); the baked results are bit-identical to the
+  interpreter's because the simulated path *is* the executed path.
+
+The dynamic state is split in two.  ``_Data`` (registers, shared memory,
+predicate stacks, TDX grid) is per-job: under the fleet's compiled tier
+it carries a leading batch axis and every same-program core advances in
+lock-step through identical blocks.  ``_Seq`` (PC, cycles, stacks,
+counters) is data-independent — identical for every core running the
+program — so it stays unbatched even in a batched run, and block-to-block
+control flow remains *real* control flow (one switch branch executes)
+instead of vmap's execute-everything-select-one.
+
+Results are bit-identical to :func:`repro.core.executor.run_program` —
+registers, shared memory, cycles, steps, PC, stats, hazard rows and
+violation count — which the equivalence suite (``tests/test_blockc.py``)
+pins across the program suite and configuration space.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import isa, semantics
+from . import machine as machine_mod
+from .assembler import ProgramImage
+from .config import EGPUConfig
+from .executor import (_PF_IMM, _PF_OP, _PF_RA, _PF_RB, _PF_RD, _PF_TSC,
+                       _PF_TYP, _TC_CLS, _TC_LAT, _TC_PER_WF0, _TC_READS_RA,
+                       _TC_READS_RB, _TC_READS_RD, _TC_SCALAR, _TC_WRITES_PRED,
+                       _TC_WRITES_RD, pad_image, tables_np)
+from .isa import Op, Typ
+from .machine import MachineState
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+#: sequencer ops that end a basic block (IF/ELSE/ENDIF are *predicate*
+#: ops — they mask threads but never move the PC, so they trace inline)
+_SEQ_TERM = (int(Op.JMP), int(Op.JSR), int(Op.RTS), int(Op.LOOP),
+             int(Op.STOP))
+
+#: trace-size bound: longer straight-line runs are split with an
+#: artificial fall-through (keeps per-block XLA compiles bounded)
+_MAX_BLOCK = 192
+
+#: host-side path-simulation bound (a program must halt within
+#: ``min(cfg.max_steps, _SIM_CAP)`` to be block-compilable)
+_SIM_CAP = 4_000_000
+
+
+class BlockCompileError(Exception):
+    """The program cannot be block-compiled (e.g. it does not halt within
+    ``cfg.max_steps``, so interpreter equivalence cannot be guaranteed at
+    block granularity).  Callers fall back to the interpreter."""
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def _gidx(i: int, n: int) -> int:
+    """JAX dynamic-gather index semantics: negative wraps once, then
+    clamps into range (mirrors ``arr[i]`` with a traced ``i``)."""
+    if i < 0:
+        i += n
+    return min(max(i, 0), n - 1)
+
+
+def _i32wrap(v: int) -> int:
+    return ((v + (1 << 31)) & 0xFFFFFFFF) - (1 << 31)
+
+
+# ---------------------------------------------------------------------------
+# Static decode helpers
+# ---------------------------------------------------------------------------
+
+def _wfs_table(cfg: EGPUConfig, threads: int) -> list[int]:
+    w_rt = _cdiv(threads, cfg.num_sps)
+    return [1, w_rt, max(1, _cdiv(w_rt, 2)), max(1, _cdiv(w_rt, 4))]
+
+
+def _tsc_static(cfg: EGPUConfig, tsc: int, threads: int):
+    """(wfs, tsc_mask) for one instruction — everything Table 3 encodes,
+    folded to Python/NumPy constants."""
+    width_code = (tsc >> 2) & 3
+    depth_code = tsc & 3
+    wfs = _wfs_table(cfg, threads)[depth_code]
+    lanes = isa.WIDTH_LANES[width_code]
+    tid = np.arange(cfg.max_threads)
+    tsc_mask = ((tid % cfg.num_sps < lanes) & (tid // cfg.num_sps < wfs)
+                & (tid < threads))
+    return wfs, tsc_mask
+
+
+# ---------------------------------------------------------------------------
+# CFG decomposition
+# ---------------------------------------------------------------------------
+
+def _decompose(packed: np.ndarray, n: int) -> list[tuple[int, int]]:
+    """Split ``[0, n)`` into basic blocks ``(start, end)`` (end exclusive,
+    terminator included).  Leaders: instruction 0, every in-range
+    JMP/JSR/LOOP target, and every instruction after a sequencer op
+    (fall-throughs and JSR return addresses)."""
+    ops = packed[:n, _PF_OP]
+    imms = packed[:n, _PF_IMM]
+    leaders = {0}
+    for i in range(n):
+        o = int(ops[i])
+        if o in (int(Op.JMP), int(Op.JSR), int(Op.LOOP)):
+            t = int(imms[i])
+            if 0 <= t < n:
+                leaders.add(t)
+        if o in _SEQ_TERM and i + 1 < n:
+            leaders.add(i + 1)
+    starts = sorted(leaders)
+    blocks: list[tuple[int, int]] = []
+    for s, e in zip(starts, starts[1:] + [n]):
+        while e - s > _MAX_BLOCK:
+            blocks.append((s, s + _MAX_BLOCK))
+            s += _MAX_BLOCK
+        blocks.append((s, e))
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Static path simulation: sequencer + cycles + hazard checker, on the host
+# ---------------------------------------------------------------------------
+
+class _SimResult(NamedTuple):
+    steps: int
+    cycles: int
+    hazard: np.ndarray          # (R+2, 4) int32 — final checker rows
+    violations: int
+
+
+def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
+              threads: int, validate: bool) -> _SimResult:
+    """Walk the (fully static) execution path once, mirroring the
+    interpreter's sequencer, cycle accounting and hazard checker
+    bit-for-bit.  Raises :class:`BlockCompileError` if the program does
+    not halt before ``cfg.max_steps`` (the interpreter would then stop
+    mid-block, which the block driver cannot reproduce)."""
+    t = tables_np(cfg)
+    R = cfg.regs_per_thread
+    LD, CD = cfg.max_loop_depth, cfg.max_call_depth
+    wfs_by_depth = _wfs_table(cfg, threads)
+    hz = machine_mod.hazard_init(R).astype(np.int64)
+    violations = 0
+    lctr = [0] * LD
+    cstack = [0] * CD
+    lsp = csp = 0
+    pc = cycles = steps = 0
+    halted = False
+    cap = min(cfg.max_steps, _SIM_CAP)
+    L = packed.shape[0]
+
+    while (not halted) and steps < cfg.max_steps and 0 <= pc < prog_len:
+        if steps >= cap:
+            raise BlockCompileError(
+                f"program did not halt within {cap} steps")
+        op, typ, rd, ra, rb, imm, tsc = (int(v) for v in packed[min(pc, L - 1)])
+        width_code = (tsc >> 2) & 3
+        depth_code = tsc & 3
+        wfs = wfs_by_depth[depth_code]
+        per_wf = int(t[op, _TC_PER_WF0 + width_code])
+        scalar = bool(t[op, _TC_SCALAR])
+        writes_rd = bool(t[op, _TC_WRITES_RD])
+        issue = 1 if scalar else per_wf * wfs
+
+        if validate:
+            rows = [hz[_gidx(ra, R + 2)], hz[_gidx(rb, R + 2)],
+                    hz[_gidx(rd, R + 2)], hz[R], hz[R + 1]]
+            flags = [bool(t[op, _TC_READS_RA]), bool(t[op, _TC_READS_RB]),
+                     bool(t[op, _TC_READS_RD]), op == Op.LOD,
+                     cfg.has_predicates and not scalar]
+            need = -(1 << 30)
+            for (p_start, p_per_wf, p_wfs, p_lat), fl in zip(rows, flags):
+                if not fl:
+                    continue
+                k = min(int(p_wfs), wfs) - 1 if p_per_wf > per_wf else 0
+                cons = int(p_start) + int(p_per_wf) * (k + 1) - 1 \
+                    + int(p_lat) - per_wf * k
+                need = max(need, cons)
+            if ((not scalar) or op == Op.LOD) and need > cycles:
+                violations += 1
+            new_row = (cycles, per_wf, wfs, int(t[op, _TC_LAT]))
+            if writes_rd and 0 <= rd < R + 2:
+                hz[rd] = new_row
+            if op == Op.STO:
+                hz[R] = new_row
+            if t[op, _TC_WRITES_PRED]:
+                hz[R + 1] = new_row
+
+        if op == Op.JMP:
+            pc = imm
+        elif op == Op.JSR:
+            if 0 <= csp < CD:
+                cstack[csp] = pc + 1
+            csp += 1
+            pc = imm
+        elif op == Op.RTS:
+            pc = cstack[_gidx(csp - 1, CD)]
+            csp -= 1
+        elif op == Op.LOOP:
+            ltop = lctr[_gidx(lsp - 1, LD)]
+            if 0 <= lsp - 1 < LD:
+                lctr[lsp - 1] = ltop - 1
+            if ltop > 0:
+                pc = imm
+            else:
+                lsp -= 1
+                pc += 1
+        elif op == Op.INIT:
+            if 0 <= lsp < LD:
+                lctr[lsp] = imm
+            lsp += 1
+            pc += 1
+        else:
+            if op == Op.STOP:
+                halted = True
+            pc += 1
+        cycles = _i32wrap(cycles + issue)
+        steps += 1
+
+    if (not halted) and steps >= cfg.max_steps and 0 <= pc < prog_len:
+        raise BlockCompileError(
+            f"program did not halt within max_steps={cfg.max_steps}")
+    return _SimResult(steps=steps, cycles=cycles,
+                      hazard=hz.astype(np.int32), violations=violations)
+
+
+# ---------------------------------------------------------------------------
+# The dynamic state, split by batching behaviour
+# ---------------------------------------------------------------------------
+
+class _Data(NamedTuple):
+    """Per-job state (batched under the fleet's compiled tier)."""
+
+    regs: Any                  # (..., T, R) uint32
+    shared: Any                # (..., S) uint32
+    pstack: Any                # (..., T, D) bool
+    tdx_dim: Any               # (...,) int32
+
+
+class _Seq(NamedTuple):
+    """Data-independent state — identical for every core running the
+    program, so it stays unbatched even in a batched run."""
+
+    pc: Any                    # () int32
+    cycles: Any                # () int32
+    steps: Any                 # () int32
+    halted: Any                # () bool
+    pdepth: Any                # (T,) int32
+    lctr: Any                  # (LD,) int32
+    lsp: Any                   # () int32
+    cstack: Any                # (CD,) int32
+    csp: Any                   # () int32
+    stat_cycles: Any           # (NUM_OP_CLASSES,) int32
+    stat_instrs: Any           # (NUM_OP_CLASSES,) int32
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+
+class CompiledProgram:
+    """One program, block-compiled for one (config, thread-count) pair.
+
+    ``run()`` executes a single core; ``run_batch()`` executes N cores in
+    lock-step over batched data (same blocks, different data) — the
+    fleet's compiled tier.  Fresh states only: the static path (and the
+    baked hazard results) assume execution starts at PC 0 with empty
+    stacks and zeroed registers, exactly like :func:`init_state`.
+    """
+
+    def __init__(self, image: ProgramImage, threads: int, *,
+                 validate: bool = True):
+        cfg = image.cfg
+        if threads > cfg.max_threads or threads % cfg.num_sps:
+            raise ValueError(
+                f"runtime threads {threads} invalid for max "
+                f"{cfg.max_threads}")
+        self.cfg = cfg
+        self.image = image
+        self.threads = threads
+        self.validate = validate
+        self.packed, self.prog_len = pad_image(image)
+        self.n = image.n
+        self.sim = _simulate(cfg, self.packed, self.prog_len, threads,
+                             validate)
+        self.blocks = _decompose(self.packed, self.n)
+        # NOT gated on cfg.has_predicates: the interpreter emulates a
+        # one-level stack even for predicate-less configs (D clamps to 1)
+        self.has_preds = any(
+            int(o) in isa.PRED_WRITE_OPS for o in image.op)
+        # pc -> block index; the padded STOP tail shares one dynamic block
+        p2b = np.full((self.prog_len,), len(self.blocks), np.int32)
+        for bi, (s, e) in enumerate(self.blocks):
+            p2b[s:e] = bi
+        self._pc2block = p2b
+        self._tables = tables_np(cfg)
+        self._run_jit = self._build_runner()
+
+    # ------------------------------------------------------------- blocks
+    def _block_fn(self, start: int, end: int):
+        """Trace ``[start, end)`` as one straight-line computation."""
+        cfg = self.cfg
+        T, R, S = cfg.max_threads, cfg.regs_per_thread, cfg.shared_words
+        D = max(1, cfg.predicate_levels)
+        t = self._tables
+        tid = np.arange(T, dtype=np.int32)
+        tid0 = tid == 0
+        rows = [tuple(int(v) for v in self.packed[i])
+                for i in range(start, end)]
+        term_op = rows[-1][_PF_OP] if rows[-1][_PF_OP] in _SEQ_TERM else None
+
+        # per-block constants: cycles / instruction-mix increments
+        block_cycles = 0
+        stat_c = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
+        stat_i = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
+        for (op, typ, rd, ra, rb, imm, tsc) in rows:
+            wfs, _ = _tsc_static(cfg, tsc, self.threads)
+            width_code = (tsc >> 2) & 3
+            per_wf = int(t[op, _TC_PER_WF0 + width_code])
+            issue = 1 if t[op, _TC_SCALAR] else per_wf * wfs
+            block_cycles += issue
+            stat_c[t[op, _TC_CLS]] += issue
+            stat_i[t[op, _TC_CLS]] += 1
+
+        def fn(data: _Data, seq: _Seq):
+            regs, shared, pstack = data.regs, data.shared, data.pstack
+            pdepth = seq.pdepth
+            lctr, lsp = seq.lctr, seq.lsp
+            cstack, csp = seq.cstack, seq.csp
+            halted = seq.halted
+            pc_next = jnp.int32(end)        # fall-through default
+            pok = None                      # cached predicate mask
+
+            for (op, typ, rd, ra, rb, imm, tsc) in rows:
+                o = Op(op)
+                if o in (Op.JMP, Op.STOP, Op.NOP):
+                    continue                # handled below / no state change
+                if o == Op.JSR or o == Op.RTS:
+                    continue                # terminator, handled below
+                if o == Op.LOOP:
+                    continue                # terminator, handled below
+                if o == Op.INIT:
+                    lctr, lsp = semantics.loop_init(lctr, lsp, imm)
+                    continue
+
+                _, tsc_mask = _tsc_static(cfg, tsc, self.threads)
+                if self.has_preds:
+                    if pok is None:
+                        pok = semantics.pred_ok(pstack, pdepth, D)
+                    mask = tsc_mask & pok
+                else:
+                    mask = tsc_mask
+                ra_r, rb_r, rd_r = (_gidx(ra, R), _gidx(rb, R),
+                                    _gidx(rd, R))
+                env = semantics.OpEnv(
+                    cfg=cfg, rav=regs[..., ra_r], rbv=regs[..., rb_r],
+                    rdv=regs[..., rd_r], signed=typ == Typ.I32, imm=imm,
+                    mask=mask, tid=tid, shared=shared,
+                    tdx_dim=data.tdx_dim)
+                spec = semantics.build_spec(env)
+
+                if o in isa.IF_OPS:
+                    cond = spec[op][1]()
+                    pstack, pdepth = semantics.pred_push(
+                        pstack, pdepth, cond, tsc_mask, D)
+                    pok = None
+                elif o == Op.ELSE:
+                    pstack = semantics.pred_else(pstack, pdepth, tsc_mask, D)
+                    pok = None
+                elif o == Op.ENDIF:
+                    pdepth = semantics.pred_pop(pdepth, tsc_mask)
+                    pok = None
+                elif o == Op.STO:
+                    addr = env.addr
+                    sto_ok = mask & (addr >= 0) & (addr < S)
+                    sidx = jnp.where(sto_ok, addr, S)
+                    shared = semantics.store(shared, sidx, env.rdv)
+                elif t[op, _TC_WRITES_RD]:
+                    value = spec[op][0]().astype(_U32)
+                    wmask = tid0 if o in (Op.DOT, Op.SUM) else mask
+                    rd_w = min(max(rd, 0), R - 1)
+                    col = jnp.where(wmask, value, regs[..., rd_w])
+                    regs = regs.at[..., rd_w].set(col)
+
+            # --- terminator --------------------------------------------
+            imm = rows[-1][_PF_IMM]
+            end_pc = end
+            if term_op == Op.JMP:
+                pc_next = jnp.int32(imm)
+            elif term_op == Op.JSR:
+                cstack, csp = semantics.call_push(
+                    cstack, csp, jnp.int32(end_pc))
+                pc_next = jnp.int32(imm)
+            elif term_op == Op.RTS:
+                pc_next = semantics.call_top(cstack, csp)
+                csp = csp - 1
+            elif term_op == Op.LOOP:
+                lctr, taken, lsp_pop = semantics.loop_step(lctr, lsp)
+                lsp = jnp.where(taken, lsp, lsp_pop)
+                pc_next = jnp.where(taken, jnp.int32(imm),
+                                    jnp.int32(end_pc))
+            elif term_op == Op.STOP:
+                halted = jnp.bool_(True)
+                pc_next = jnp.int32(end_pc)
+
+            seq2 = _Seq(
+                pc=pc_next,
+                cycles=seq.cycles + jnp.int32(_i32wrap(block_cycles)),
+                steps=seq.steps + jnp.int32(len(rows)),
+                halted=halted, pdepth=pdepth,
+                lctr=lctr, lsp=jnp.asarray(lsp, _I32),
+                cstack=cstack, csp=jnp.asarray(csp, _I32),
+                stat_cycles=seq.stat_cycles + stat_c if self.validate
+                else seq.stat_cycles,
+                stat_instrs=seq.stat_instrs + stat_i if self.validate
+                else seq.stat_instrs)
+            return _Data(regs=regs, shared=shared, pstack=pstack,
+                         tdx_dim=data.tdx_dim), seq2
+
+        return fn
+
+    def _pad_stop_fn(self):
+        """One shared block for the padded STOP tail ``[n, prog_len)`` —
+        the only block whose PC is dynamic."""
+        stat_c = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
+        stat_i = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
+        stat_c[isa.OpClass.BRANCH] = 1
+        stat_i[isa.OpClass.BRANCH] = 1
+
+        def fn(data: _Data, seq: _Seq):
+            return data, seq._replace(
+                pc=seq.pc + 1, cycles=seq.cycles + 1, steps=seq.steps + 1,
+                halted=jnp.bool_(True),
+                stat_cycles=seq.stat_cycles + stat_c if self.validate
+                else seq.stat_cycles,
+                stat_instrs=seq.stat_instrs + stat_i if self.validate
+                else seq.stat_instrs)
+
+        return fn
+
+    # ------------------------------------------------------------- driver
+    def _build_runner(self):
+        fns = [self._block_fn(s, e) for s, e in self.blocks]
+        fns.append(self._pad_stop_fn())
+        pc2block = jnp.asarray(self._pc2block)
+        cfg = self.cfg
+        T, R = cfg.max_threads, cfg.regs_per_thread
+        D = max(1, cfg.predicate_levels)
+        max_steps = cfg.max_steps
+        prog_len = self.prog_len
+        hazard = self.sim.hazard
+        violations = self.sim.violations
+        threads = self.threads
+
+        def cond(carry):
+            _, seq = carry
+            return (~seq.halted) & (seq.steps < max_steps) & \
+                (seq.pc >= 0) & (seq.pc < prog_len)
+
+        def body(carry):
+            data, seq = carry
+            return lax.switch(pc2block[seq.pc], fns, data, seq)
+
+        # One dispatch per run: the fresh registers/predicate stacks and
+        # the fresh sequencer state are constants inside the jit, and the
+        # final MachineState (including the statically baked hazard rows)
+        # is assembled inside it too.  The shared-memory image is donated.
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def run(shared, tdx_dim):
+            batch = shared.shape[:-1]          # () or (B,)
+            z = jnp.int32(0)
+            data = _Data(
+                regs=jnp.zeros(batch + (T, R), jnp.uint32), shared=shared,
+                pstack=jnp.zeros(batch + (T, D), jnp.bool_),
+                tdx_dim=tdx_dim)
+            seq = _Seq(
+                pc=z, cycles=z, steps=z, halted=jnp.bool_(False),
+                pdepth=jnp.zeros((T,), _I32),
+                lctr=jnp.zeros((cfg.max_loop_depth,), _I32), lsp=z,
+                cstack=jnp.zeros((cfg.max_call_depth,), _I32), csp=z,
+                stat_cycles=jnp.zeros((isa.NUM_OP_CLASSES,), _I32),
+                stat_instrs=jnp.zeros((isa.NUM_OP_CLASSES,), _I32))
+            d, s = lax.while_loop(cond, body, (data, seq))
+
+            def b(x):   # broadcast a seq leaf over the batch axis
+                x = jnp.asarray(x)
+                return jnp.broadcast_to(x, batch + x.shape)
+
+            return MachineState(
+                regs=d.regs, shared=d.shared, pstack=d.pstack,
+                pdepth=b(s.pdepth), lctr=b(s.lctr), lsp=b(s.lsp),
+                cstack=b(s.cstack), csp=b(s.csp), pc=b(s.pc),
+                cycles=b(s.cycles), steps=b(s.steps), halted=b(s.halted),
+                threads_active=b(jnp.int32(threads)),
+                tdx_dim=d.tdx_dim,
+                stat_cycles=b(s.stat_cycles), stat_instrs=b(s.stat_instrs),
+                hazard=b(jnp.asarray(hazard)),
+                hazard_violations=b(jnp.int32(violations)))
+
+        return run
+
+    # ------------------------------------------------------------- public
+    def run(self, *, shared_init=None, tdx_dim: int = 16) -> MachineState:
+        """Execute one core; bit-identical to ``run_program``."""
+        S = self.cfg.shared_words
+        shared = np.zeros((S,), np.uint32)
+        if shared_init is not None:
+            buf = machine_mod.pack_shared_init(shared_init, S)
+            shared[:buf.size] = buf
+        out = self._run_jit(jnp.asarray(shared), jnp.int32(tdx_dim))
+        out.cycles.block_until_ready()
+        return out
+
+    def run_batch(self, shared_inits: list, tdx_dims) -> MachineState:
+        """Execute N same-program cores in lock-step over batched data;
+        returns the batched final state (slice jobs out along axis 0)."""
+        S = self.cfg.shared_words
+        n = len(shared_inits)
+        shared = np.zeros((n, S), np.uint32)
+        for i, s0 in enumerate(shared_inits):
+            if s0 is None:
+                continue
+            buf = machine_mod.pack_shared_init(s0, S)
+            shared[i, :buf.size] = buf
+        out = self._run_jit(jnp.asarray(shared),
+                            jnp.asarray(tdx_dims, _I32))
+        out.cycles.block_until_ready()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Compile cache + convenience drivers
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+_CACHE_MAX = 128
+
+
+def program_key(image: ProgramImage) -> bytes:
+    """Content identity of a program (the bit-packed instruction words
+    encode every field) — used by the compile cache and the fleet's
+    same-program batch grouping."""
+    return image.words.tobytes()
+
+
+def compile_program(image: ProgramImage, threads: int | None = None, *,
+                    validate: bool = True) -> CompiledProgram:
+    """Block-compile ``image`` for a static runtime thread count
+    (default: the count it was assembled for).  Compiles are cached on
+    (config, program bytes, threads, validate) — rejections too, so a
+    non-halting program pays its (up to ``max_steps``-long) host-side
+    path walk once, not on every fleet drain.
+
+    Raises :class:`BlockCompileError` for programs whose static path does
+    not halt within ``cfg.max_steps``.
+    """
+    threads = threads or image.threads_active
+    key = (image.cfg, program_key(image), threads, validate)
+    hit = _CACHE.get(key)
+    if hit is None:
+        if len(_CACHE) >= _CACHE_MAX:
+            _CACHE.pop(next(iter(_CACHE)))
+        try:
+            hit = CompiledProgram(image, threads, validate=validate)
+        except BlockCompileError as e:
+            hit = e                      # negative-cache the rejection
+        _CACHE[key] = hit
+    if isinstance(hit, BlockCompileError):
+        raise hit
+    return hit
+
+
+def run_compiled(image: ProgramImage, *, threads: int | None = None,
+                 tdx_dim: int = 16, shared_init=None, validate: bool = True,
+                 fallback: bool = True) -> MachineState:
+    """Execute an assembled program through the block compiler.
+
+    Drop-in for ``run_program(image, threads=..., tdx_dim=...,
+    shared_init=...)`` — results are bit-identical.  ``fallback=True``
+    silently routes programs the compiler rejects (non-halting static
+    path) to the interpreter.
+    """
+    try:
+        cp = compile_program(image, threads, validate=validate)
+    except BlockCompileError:
+        if not fallback:
+            raise
+        from .executor import run_program
+        return run_program(image, validate=validate,
+                           threads=threads or image.threads_active,
+                           tdx_dim=tdx_dim, shared_init=shared_init)
+    return cp.run(shared_init=shared_init, tdx_dim=tdx_dim)

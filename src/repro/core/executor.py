@@ -14,6 +14,13 @@ Cycle accounting matches :mod:`repro.core.cost` exactly, and a built-in
 hazard checker counts read-after-write violations (the eGPU has no hazard
 hardware; a correct program — i.e. one produced by the assembler's
 scheduler — must report zero).
+
+The per-opcode *semantics* (value/condition functions, predicate and
+sequencer stack updates) live in :mod:`repro.core.semantics`, shared
+with the basic-block compiler (:mod:`repro.core.blockc`) — this module
+contributes the per-instruction *dispatch*: gather the instruction from
+the program image, select the value through a switch/where-chain, and
+apply every architectural update exactly once with mask-gated selects.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import isa
+from . import isa, semantics
 from .assembler import ProgramImage
 from .config import EGPUConfig
 from .isa import Op, Typ
@@ -41,7 +48,7 @@ _HZ_PRED = -1
 # ---------------------------------------------------------------------------
 # Constant per-opcode tables (built once per config, baked into the jaxpr).
 #
-# All per-opcode metadata lives in ONE (NUM_OPCODES, 11) int32 table so the
+# All per-opcode metadata lives in ONE (NUM_OPCODES, 12) int32 table so the
 # step function fetches it with a single dynamic row gather — under the
 # vmapped fleet every separate gather is a separate (batched) HLO op, and
 # the step is op-dispatch bound on CPU, not FLOP bound.
@@ -50,16 +57,19 @@ _HZ_PRED = -1
 # table columns
 (_TC_SCALAR, _TC_READS_RA, _TC_READS_RB, _TC_READS_RD, _TC_WRITES_RD,
  _TC_LAT, _TC_CLS, _TC_PER_WF0) = range(8)          # per_wf spans cols 7..10
+_TC_WRITES_PRED = 11
 
 # program-image columns (see pad_image)
 _PF_OP, _PF_TYP, _PF_RD, _PF_RA, _PF_RB, _PF_IMM, _PF_TSC = range(7)
 PROG_FIELDS = ("op", "typ", "rd", "ra", "rb", "imm", "tsc")
 
 
-def _tables(cfg: EGPUConfig):
+def tables_np(cfg: EGPUConfig) -> np.ndarray:
+    """The per-opcode metadata table as NumPy (shared with the static
+    path simulator in :mod:`repro.core.blockc`)."""
     n = isa.NUM_OPCODES
-    t = np.zeros((n, 11), np.int32)
-    t[:, _TC_PER_WF0:] = 1
+    t = np.zeros((n, 12), np.int32)
+    t[:, _TC_PER_WF0:_TC_PER_WF0 + 4] = 1
     from . import cost as _cost
 
     for op in Op:
@@ -70,92 +80,22 @@ def _tables(cfg: EGPUConfig):
         t[op, _TC_WRITES_RD] = op in isa.REG_WRITE_OPS
         t[op, _TC_LAT] = _cost.result_latency(op, cfg)
         t[op, _TC_CLS] = isa.OP_CLASS[op]
+        t[op, _TC_WRITES_PRED] = op in isa.PRED_WRITE_OPS
         for wc in range(4):
             width = isa.WIDTH_LANES[wc]
             if op == Op.LOD:
                 t[op, _TC_PER_WF0 + wc] = -(-width // cfg.cost.sp_read_ports)
             elif op == Op.STO:
                 t[op, _TC_PER_WF0 + wc] = -(-width // cfg.write_ports)
-    return jnp.asarray(t)
+    return t
+
+
+def _tables(cfg: EGPUConfig):
+    return jnp.asarray(tables_np(cfg))
 
 
 def _cdiv(a, b):
     return (a + b - 1) // b
-
-
-# ---------------------------------------------------------------------------
-# Integer helpers (bit-exact, uint32 register file)
-# ---------------------------------------------------------------------------
-
-def _i(x):
-    return x.astype(jnp.int32)
-
-
-def _u(x):
-    return x.astype(_U32)
-
-
-def _f(x):
-    return lax.bitcast_convert_type(x, jnp.float32)
-
-
-def _bits(x):
-    return lax.bitcast_convert_type(x.astype(jnp.float32), _U32)
-
-
-def _sext16(x_u32):
-    """Sign-extend the low 16 bits."""
-    x = _i(x_u32 & _U32(0xFFFF))
-    return jnp.where(x >= 1 << 15, x - (1 << 16), x)
-
-
-def _sext24(x_u32):
-    x = _i(x_u32 & _U32(0xFFFFFF))
-    return jnp.where(x >= 1 << 23, x - (1 << 24), x)
-
-
-def _bit_reverse32(x):
-    x = ((x & _U32(0x55555555)) << 1) | ((x >> 1) & _U32(0x55555555))
-    x = ((x & _U32(0x33333333)) << 2) | ((x >> 2) & _U32(0x33333333))
-    x = ((x & _U32(0x0F0F0F0F)) << 4) | ((x >> 4) & _U32(0x0F0F0F0F))
-    x = ((x & _U32(0x00FF00FF)) << 8) | ((x >> 8) & _U32(0x00FF00FF))
-    x = (x << 16) | (x >> 16)
-    return x
-
-
-def _mul24(a_u32, b_u32, signed):
-    """24x24 -> 48-bit product as (hi24, lo24) uint32 limb pair.
-
-    Implemented in 32-bit limbs (the container runs with x64 disabled,
-    and the hardware is a 24-bit multiplier anyway).
-    """
-    if signed:
-        sa = _sext24(a_u32)
-        sb = _sext24(b_u32)
-        neg = (sa < 0) ^ (sb < 0)
-        a = _u(jnp.abs(sa))
-        b = _u(jnp.abs(sb))
-    else:
-        neg = jnp.zeros(a_u32.shape, jnp.bool_)
-        a = a_u32 & _U32(0xFFFFFF)
-        b = b_u32 & _U32(0xFFFFFF)
-    m12 = _U32((1 << 12) - 1)
-    m24 = _U32((1 << 24) - 1)
-    ah, al = a >> 12, a & m12
-    bh, bl = b >> 12, b & m12
-    low = al * bl                       # < 2^24
-    mid = ah * bl + al * bh             # < 2^25
-    t = mid + (low >> 12)               # < 2^26
-    hi = ah * bh + (t >> 12)            # bits [47:24]
-    lo = ((t & m12) << 12) | (low & m12)  # bits [23:0]
-    # two's-complement negate the 48-bit (hi, lo) pair where requested
-    nlo = (-lo) & m24
-    borrow = (lo != 0).astype(_U32)
-    nhi = ((~hi) & m24) + _U32(1) - borrow
-    nhi = nhi & m24
-    hi = jnp.where(neg, nhi, hi)
-    lo = jnp.where(neg, nlo, lo)
-    return hi, lo, neg
 
 
 # ---------------------------------------------------------------------------
@@ -259,10 +199,8 @@ def make_step(cfg: EGPUConfig, prog_len: int,
 
         # --- active masks ------------------------------------------------
         tsc_mask = (lane < lanes) & (wf < wfs) & (tid < st.threads_active)
-        lvl = jnp.arange(D, dtype=_I32)
-        pred_ok = jnp.all(st.pstack | (lvl[None, :] >= st.pdepth[:, None]),
-                          axis=1)
-        mask = tsc_mask & pred_ok
+        pred = semantics.pred_ok(st.pstack, st.pdepth, D)
+        mask = tsc_mask & pred
 
         # --- operand reads (one gather) ----------------------------------
         srcs = jnp.stack([ra, rb, rd])
@@ -297,171 +235,18 @@ def make_step(cfg: EGPUConfig, prog_len: int,
             hrow = ((ridx == jnp.where(writes_rd, rd, none)) |
                     (ridx == jnp.where(op == Op.STO, _I32(R + 2 + _HZ_MEM),
                                        none)) |
-                    (ridx == jnp.where(op >= Op.IF_EQ,
+                    (ridx == jnp.where(trow[_TC_WRITES_PRED] == 1,
                                        _I32(R + 2 + _HZ_PRED), none))) & gate
             hz = jnp.where(hrow[:, None], new_row[None, :], hz)
 
-        # --- semantic helpers ---------------------------------------------
-        alu_mask = _U32((1 << cfg.alu_bits) - 1 if cfg.alu_bits < 32
-                        else 0xFFFFFFFF)
-
-        def imask(v):  # integer ALU precision (16-bit ALU configs)
-            return v.astype(_U32) & alu_mask
-
-        signed = typ == Typ.I32
-
-        # --- per-opcode value functions ------------------------------------
-        def shift_amt():
-            return rbv & _U32(cfg.alu_bits - 1 if cfg.shift_bits > 1 else 1)
-
-        def f_add(): return imask(rav + rbv)
-        def f_sub(): return imask(rav - rbv)
-        def f_negi(): return imask(_u(-_i(rav)))
-        def f_absi(): return imask(_u(jnp.abs(_i(rav))))
-
-        def f_mul16lo():
-            p_s = _sext16(rav) * _sext16(rbv)
-            p_u = _i((rav & _U32(0xFFFF)) * (rbv & _U32(0xFFFF)))
-            return imask(_u(jnp.where(signed, p_s, p_u)))
-
-        def f_mul16hi():
-            p_s = (_sext16(rav) * _sext16(rbv)) >> 16
-            p_u = _u((rav & _U32(0xFFFF)) * (rbv & _U32(0xFFFF))) >> 16
-            return imask(jnp.where(signed, _u(p_s), p_u))
-
-        def f_mul24lo():
-            hi, lo, _ = _mul24(rav, rbv, False)
-            hi_s, lo_s, _ = _mul24(rav, rbv, True)
-            # low 32 bits of the 48-bit product
-            u = (lo | (hi << 24))
-            s = (lo_s | (hi_s << 24))
-            return imask(jnp.where(signed, s, u))
-
-        def f_mul24hi():
-            hi, lo, _ = _mul24(rav, rbv, False)
-            hi_s, lo_s, neg = _mul24(rav, rbv, True)
-            # arithmetic >>24 of the 48-bit product: extend from bit 47
-            # (== bit 23 of hi24) — NOT from the sign flag, which is also
-            # set for zero products of opposite-signed operands
-            s = jnp.where((hi_s & _U32(0x800000)) != 0,
-                          hi_s | _U32(0xFF000000), hi_s)
-            return imask(jnp.where(signed, s, hi))
-
-        def f_and(): return imask(rav & rbv)
-        def f_or(): return imask(rav | rbv)
-        def f_xor(): return imask(rav ^ rbv)
-        def f_not(): return imask(~rav)
-        def f_cnot(): return imask(jnp.where(rav == 0, _U32(1), _U32(0)))
-        def f_bvs(): return imask(_bit_reverse32(rav))
-
-        def f_shl(): return imask(rav << shift_amt())
-
-        def f_shr():
-            log = rav >> shift_amt()
-            ari = _u(_i(rav) >> _i(shift_amt()))
-            return imask(jnp.where(signed, ari, log))
-
-        def f_pop(): return imask(lax.population_count(rav))
-
-        def f_max():
-            s = jnp.where(_i(rav) > _i(rbv), rav, rbv)
-            u = jnp.where(rav > rbv, rav, rbv)
-            return imask(jnp.where(signed, s, u))
-
-        def f_min():
-            s = jnp.where(_i(rav) < _i(rbv), rav, rbv)
-            u = jnp.where(rav < rbv, rav, rbv)
-            return imask(jnp.where(signed, s, u))
-
-        # FP (bitcast through the uint32 register file)
-        def f_fadd(): return _bits(_f(rav) + _f(rbv))
-        def f_fsub(): return _bits(_f(rav) - _f(rbv))
-        def f_fneg(): return rav ^ _U32(0x80000000)
-        def f_fabs(): return rav & _U32(0x7FFFFFFF)
-        def f_fmul(): return _bits(_f(rav) * _f(rbv))
-        def f_fmax(): return _bits(jnp.maximum(_f(rav), _f(rbv)))
-        def f_fmin(): return _bits(jnp.minimum(_f(rav), _f(rbv)))
-
-        # memory / immediates / thread ids.  LODI/TDX/TDY results are
-        # produced by the integer datapath, so a 16-bit ALU clips them to
-        # ``alu_bits`` like any other integer result; LOD is *not* masked
-        # (the shared memory is a full 32-bit datapath) and neither are the
-        # FP units (bitcast results bypass the integer ALU entirely).
-        addr = _i(rav) + imm
-
-        def f_lod():
-            return st.shared[jnp.clip(addr, 0, S - 1)]
-
-        def f_lodi():
-            return imask(jnp.broadcast_to(_u(imm), (T,)))
-
-        def f_tdx(): return imask(_u(tid % st.tdx_dim))
-        def f_tdy(): return imask(_u(tid // st.tdx_dim))
-
-        # extension units: DOT/SUM land in thread 0's Rd.  The reduction
-        # order is fixed (sequential over wavefronts, pairwise tree within
-        # the 16-lane wavefront, like the hardware's accumulator) so the
-        # single-core and vmapped fleet paths produce bit-identical sums —
-        # ``jnp.sum`` may associate differently under vmap.
-        def _det_sum(v):
-            m = v.reshape(T // 16, 16)
-            acc = m[0]
-            for i in range(1, T // 16):
-                acc = acc + m[i]
-            for s in (8, 4, 2, 1):
-                acc = acc[:s] + acc[s:2 * s]
-            return acc[0]
-
-        def f_dot():
-            s = _det_sum(jnp.where(mask, _f(rav) * _f(rbv), 0.0))
-            return jnp.broadcast_to(_bits(s), (T,))
-
-        def f_sum():
-            s = _det_sum(jnp.where(mask, _f(rav), 0.0))
-            return jnp.broadcast_to(_bits(s), (T,))
-
-        def f_invsqr(): return _bits(lax.rsqrt(_f(rav)))
-
-        # --- the opcode dispatch -------------------------------------------
-        # ``spec[op] = (value_fn | None, cond_fn | None)``: the write value
-        # an instruction produces and (for IF.cc) its condition.  Control
-        # ops carry no value function (their register write is gated off by
-        # the ``writes_rd`` table anyway).
-        fa, fb = _f(rav), _f(rbv)
+        # --- per-opcode value/condition functions (shared semantics) -----
+        env = semantics.OpEnv(cfg=cfg, rav=rav, rbv=rbv, rdv=rdv,
+                              signed=typ == Typ.I32, imm=imm, mask=mask,
+                              tid=tid, shared=st.shared,
+                              tdx_dim=st.tdx_dim)
+        spec = semantics.build_spec(env)
+        addr = env.addr
         no_cond = jnp.zeros((T,), jnp.bool_)
-        spec: list = [None] * isa.NUM_OPCODES
-        for o, f in [(Op.ADD, f_add), (Op.SUB, f_sub), (Op.NEG, f_negi),
-                     (Op.ABS, f_absi), (Op.MUL16LO, f_mul16lo),
-                     (Op.MUL16HI, f_mul16hi), (Op.MUL24LO, f_mul24lo),
-                     (Op.MUL24HI, f_mul24hi), (Op.AND, f_and), (Op.OR, f_or),
-                     (Op.XOR, f_xor), (Op.NOT, f_not), (Op.CNOT, f_cnot),
-                     (Op.BVS, f_bvs), (Op.SHL, f_shl), (Op.SHR, f_shr),
-                     (Op.POP, f_pop), (Op.MAX, f_max), (Op.MIN, f_min),
-                     (Op.FADD, f_fadd), (Op.FSUB, f_fsub), (Op.FNEG, f_fneg),
-                     (Op.FABS, f_fabs), (Op.FMUL, f_fmul), (Op.FMAX, f_fmax),
-                     (Op.FMIN, f_fmin), (Op.LOD, f_lod), (Op.LODI, f_lodi),
-                     (Op.TDX, f_tdx), (Op.TDY, f_tdy), (Op.DOT, f_dot),
-                     (Op.SUM, f_sum), (Op.INVSQR, f_invsqr)]:
-            spec[o] = (f, None)
-        for o, f in [(Op.IF_EQ, lambda: rav == rbv),
-                     (Op.IF_NE, lambda: rav != rbv),
-                     (Op.IF_LT, lambda: _i(rav) < _i(rbv)),
-                     (Op.IF_LO, lambda: rav < rbv),
-                     (Op.IF_LE, lambda: _i(rav) <= _i(rbv)),
-                     (Op.IF_LS, lambda: rav <= rbv),
-                     (Op.IF_GT, lambda: _i(rav) > _i(rbv)),
-                     (Op.IF_HI, lambda: rav > rbv),
-                     (Op.IF_GE, lambda: _i(rav) >= _i(rbv)),
-                     (Op.IF_HS, lambda: rav >= rbv),
-                     (Op.IF_FEQ, lambda: fa == fb),
-                     (Op.IF_FNE, lambda: fa != fb),
-                     (Op.IF_FLT, lambda: fa < fb),
-                     (Op.IF_FLE, lambda: fa <= fb),
-                     (Op.IF_FGT, lambda: fa > fb),
-                     (Op.IF_FGE, lambda: fa >= fb),
-                     (Op.IF_Z, lambda: rav == 0),
-                     (Op.IF_NZ, lambda: rav != 0)]:
-            spec[o] = (None, f)
 
         if flat_dispatch:
             # nested-where chain over the working set: every elementwise
@@ -507,14 +292,12 @@ def make_step(cfg: EGPUConfig, prog_len: int,
         is_if = ((op >= Op.IF_EQ) & (op <= Op.IF_NZ)) & gate
         is_else = (op == Op.ELSE) & gate
         is_endif = (op == Op.ENDIF) & gate
-        oh_push = (lvl[None, :] == st.pdepth[:, None]) & tsc_mask[:, None]
-        ps_push = jnp.where(oh_push, ifcond[:, None], st.pstack)
-        pd_push = st.pdepth + jnp.where(tsc_mask & (st.pdepth < D), 1, 0)
-        oh_else = (lvl[None, :] == (st.pdepth[:, None] - 1)) \
-            & tsc_mask[:, None] & (st.pdepth[:, None] > 0)
-        pd_pop = st.pdepth - jnp.where(tsc_mask & (st.pdepth > 0), 1, 0)
+        ps_push, pd_push = semantics.pred_push(st.pstack, st.pdepth, ifcond,
+                                               tsc_mask, D)
+        ps_else = semantics.pred_else(st.pstack, st.pdepth, tsc_mask, D)
+        pd_pop = semantics.pred_pop(st.pdepth, tsc_mask)
         pstack = jnp.where(is_if, ps_push,
-                           jnp.where(is_else, st.pstack ^ oh_else, st.pstack))
+                           jnp.where(is_else, ps_else, st.pstack))
         pdepth = jnp.where(is_if, pd_push,
                            jnp.where(is_endif, pd_pop, st.pdepth))
 
@@ -526,20 +309,14 @@ def make_step(cfg: EGPUConfig, prog_len: int,
         is_init = (op == Op.INIT) & gate
         is_stop = (op == Op.STOP) & gate
 
-        cm = (jnp.arange(st.cstack.shape[0], dtype=_I32) == st.csp) & is_jsr
-        cstack = jnp.where(cm, pc + 1, st.cstack)
-        csp = st.csp + jnp.where(is_jsr, 1, 0) - jnp.where(is_rts, 1, 0)
-        rts_pc = st.cstack[st.csp - 1]
+        cstack, csp = semantics.call_push(st.cstack, st.csp, pc + 1,
+                                          en=is_jsr)
+        csp = csp - jnp.where(is_rts, 1, 0)
+        rts_pc = semantics.call_top(st.cstack, st.csp)
 
-        lsp1 = st.lsp - 1
-        ltop = st.lctr[lsp1]
-        taken = ltop > 0
-        lidx = jnp.arange(st.lctr.shape[0], dtype=_I32)
-        lctr = jnp.where((lidx == st.lsp) & is_init, imm,
-                         jnp.where((lidx == lsp1) & is_loop, ltop - 1,
-                                   st.lctr))
-        lsp = jnp.where(is_init, st.lsp + 1,
-                        jnp.where(is_loop & ~taken, lsp1, st.lsp))
+        lctr, lsp = semantics.loop_init(st.lctr, st.lsp, imm, en=is_init)
+        lctr, taken, lsp_pop = semantics.loop_step(lctr, st.lsp, en=is_loop)
+        lsp = jnp.where(is_loop & ~taken, lsp_pop, lsp)
 
         pc1 = jnp.where(gate, pc + 1, pc)
         pc_next = jnp.where(
@@ -579,9 +356,13 @@ def make_step(cfg: EGPUConfig, prog_len: int,
 # Single-core driver
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=32)
-def _make_runner(cfg: EGPUConfig, prog_len: int):
-    step, running = make_step(cfg, prog_len)
+@functools.lru_cache(maxsize=64)
+def _make_runner(cfg: EGPUConfig, prog_len: int,
+                 ops_subset: frozenset | None = None,
+                 validate: bool = True):
+    step, running = make_step(cfg, prog_len, ops_subset,
+                              check_hazards=validate,
+                              collect_stats=validate)
 
     def body(carry):
         st, prog = carry
@@ -592,7 +373,10 @@ def _make_runner(cfg: EGPUConfig, prog_len: int):
     def cond(carry):
         return running(carry[0])
 
-    @jax.jit
+    # the carried machine state is donated: XLA reuses its buffers
+    # in-place instead of copying the register file / shared memory on
+    # every dispatch (callers get a fresh state back)
+    @functools.partial(jax.jit, donate_argnums=(1,))
     def run(prog, st):
         final, _ = lax.while_loop(cond, body, (st, prog))
         return final
@@ -625,14 +409,32 @@ def pad_image(image: ProgramImage, prog_len: int | None = None):
     return packed, length
 
 
-def run_program(image: ProgramImage, state: MachineState | None = None,
-                **init_kw) -> MachineState:
-    """Execute an assembled program to completion."""
+def image_ops(image: ProgramImage) -> frozenset:
+    """The program's instruction working set (incl. the STOP padding),
+    used to specialize the interpreter dispatch to the opcodes that can
+    actually occur."""
+    return frozenset(int(o) for o in np.unique(image.op)) | {int(Op.STOP)}
+
+
+def run_program(image: ProgramImage, state: MachineState | None = None, *,
+                validate: bool = True, **init_kw) -> MachineState:
+    """Execute an assembled program to completion (interpreter tier).
+
+    The step is specialized to the program's opcode working set (the
+    same specialization the fleet fast path uses), and ``validate=False``
+    additionally drops the hazard checker and the Fig. 6 instruction-mix
+    counters — architectural results (registers, shared memory, cycles,
+    PC) are unchanged either way.
+
+    The initial state's buffers are donated to the dispatch; if you pass
+    ``state`` explicitly, treat it as consumed and use the returned one.
+    """
     cfg = image.cfg
     if state is None:
-        state = init_state(cfg, threads=image.threads_active, **init_kw)
+        init_kw.setdefault("threads", image.threads_active)
+        state = init_state(cfg, **init_kw)
     packed, length = pad_image(image)
-    runner = _make_runner(cfg, length)
+    runner = _make_runner(cfg, length, image_ops(image), validate)
     out = runner(jnp.asarray(packed), state)
     out.cycles.block_until_ready()
     return out

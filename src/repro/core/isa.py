@@ -102,6 +102,16 @@ assert NUM_OPCODES == 61, NUM_OPCODES
 _IF_OPS = tuple(op for op in Op if op.name.startswith("IF_"))
 assert len(_IF_OPS) == 18  # "including 18 conditional cases"
 
+#: The 18 IF.cc comparison opcodes (they push one predicate level).
+IF_OPS = frozenset(_IF_OPS)
+
+#: Ops that modify the per-thread predicate state: every IF.cc pushes a
+#: level, ELSE flips the top, ENDIF pops.  Hazard tracking (executor,
+#: assembler) keys the virtual predicate slot off this set — NOT off the
+#: opcode ordering — so growing the enum past ENDIF cannot silently tag
+#: new sequencer ops as predicate writers.
+PRED_WRITE_OPS = frozenset(_IF_OPS) | {Op.ELSE, Op.ENDIF}
+
 
 class Typ(enum.IntEnum):
     """2-bit representation field (Fig. 3)."""

@@ -19,13 +19,22 @@ from .scheduler import FleetScheduler, FleetStats, JobResult
 
 
 class Fleet:
-    """A homogeneous array of eGPU cores behind a job queue."""
+    """A homogeneous array of eGPU cores behind a job queue.
+
+    Same-program jobs are automatically grouped onto the block-compiled
+    lock-step tier (same blocks, different data); mixed batches fall back
+    to the vmapped interpreter.  ``use_compiler=False`` forces the
+    interpreter for everything (results are bit-identical either way).
+    """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
-                 pack_by_cost: bool = True, validate: bool = True):
+                 pack_by_cost: bool = True, validate: bool = True,
+                 use_compiler: bool = True, compile_min: int = 2):
         self._sched = FleetScheduler(cfg, batch_size,
                                      pack_by_cost=pack_by_cost,
-                                     validate=validate)
+                                     validate=validate,
+                                     use_compiler=use_compiler,
+                                     compile_min=compile_min)
 
     @property
     def cfg(self) -> EGPUConfig:

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..core import semantics
 from ..core.assembler import ProgramImage
 from ..core.config import EGPUConfig
 from ..core.executor import make_step, pad_image, padded_length
@@ -72,19 +73,13 @@ def _make_fleet_runner(cfg: EGPUConfig, prog_len: int,
         act = vrunning(states)          # halted cores no-op via the gate
         sts, sidx, rdv = vstep(states, progs, act)
 
-        # the deferred STO writes of the whole batch as ONE flat scatter,
-        # skipped entirely on cycles where no core is storing (a batched
-        # per-core scatter is the single slowest op on the CPU backend)
-        n = sidx.shape[0]
-        core = jnp.arange(n, dtype=jnp.int32)[:, None]
-        flat = jnp.where(sidx < S, core * S + sidx, n * S).ravel()
-
-        def do_store(sh):
-            return sh.ravel().at[flat].set(rdv.ravel(),
-                                           mode="drop").reshape(n, S)
-
-        shared = lax.cond(jnp.any(sidx < S), do_store, lambda sh: sh,
-                          sts.shared)
+        # the deferred STO writes of the whole batch as ONE flat scatter
+        # (semantics.store — shared with the block compiler), skipped
+        # entirely on cycles where no core is storing (a batched per-core
+        # scatter is the single slowest op on the CPU backend)
+        shared = lax.cond(jnp.any(sidx < S),
+                          lambda sh: semantics.store(sh, sidx, rdv),
+                          lambda sh: sh, sts.shared)
         return sts._replace(shared=shared)
 
     def body(carry):
@@ -93,7 +88,10 @@ def _make_fleet_runner(cfg: EGPUConfig, prog_len: int,
             states = substep(states, progs)
         return (states, progs)
 
-    @jax.jit
+    # donate the carried batch state: XLA reuses the (N, T, R) register
+    # files / (N, S) shared memories in place instead of copying them on
+    # every dispatch (callers get the final state back)
+    @functools.partial(jax.jit, donate_argnums=(1,))
     def run(progs, states):
         final, _ = lax.while_loop(cond, body, (states, progs))
         return final

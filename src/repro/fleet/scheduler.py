@@ -35,6 +35,7 @@ import numpy as np
 from ..core import isa
 from ..core import machine as machine_mod
 from ..core.assembler import Asm, ProgramImage
+from ..core.blockc import BlockCompileError, compile_program, program_key
 from ..core.config import EGPUConfig
 from ..core.executor import padded_length
 from ..core.machine import MachineState
@@ -100,6 +101,8 @@ class FleetStats:
     total_cycles: int = 0
     total_steps: int = 0
     wall_s: float = 0.0
+    compiled_jobs: int = 0       # jobs run on the block-compiled tier
+    compiled_batches: int = 0
 
     @property
     def jobs_per_sec(self) -> float:
@@ -144,16 +147,33 @@ def _batch_init_state(cfg: EGPUConfig, jobs: list[FleetJob]) -> MachineState:
 
 
 class FleetScheduler:
-    """FIFO-with-packing job queue over a homogeneous fleet."""
+    """FIFO-with-packing job queue over a homogeneous fleet.
+
+    Jobs are executed on one of two tiers:
+
+    * **block-compiled** — same-program jobs (identical instruction
+      words, identical runtime thread count) are grouped into lock-step
+      batches that run the block compiler's batched driver
+      (:meth:`repro.core.blockc.CompiledProgram.run_batch`): different
+      data, same straight-line blocks, no per-instruction dispatch;
+    * **interpreter** — everything else (mixed leftovers, groups smaller
+      than ``compile_min``, programs the compiler rejects) is packed into
+      heterogeneous vmapped batches exactly as before.
+
+    Results are bit-identical either way.
+    """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
-                 pack_by_cost: bool = True, validate: bool = True):
+                 pack_by_cost: bool = True, validate: bool = True,
+                 use_compiler: bool = True, compile_min: int = 2):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.cfg = cfg
         self.batch_size = batch_size
         self.pack_by_cost = pack_by_cost
         self.validate = validate
+        self.use_compiler = use_compiler
+        self.compile_min = compile_min
         self.stats = FleetStats()
         self._queue: list[FleetJob] = []
         self._next_handle = 0
@@ -198,18 +218,98 @@ class FleetScheduler:
                         shared_init=None, threads=self.cfg.num_sps,
                         tdx_dim=16)
 
-    def _batches(self) -> list[list[FleetJob]]:
-        jobs = self._queue
-        self._queue = []
+    def _batches(self, jobs: list[FleetJob]) -> list[list[FleetJob]]:
         if self.pack_by_cost:
             jobs = sorted(jobs, key=lambda j: -j.cost)
         return [jobs[i:i + self.batch_size]
                 for i in range(0, len(jobs), self.batch_size)]
 
+    def _split_compilable(self, jobs: list[FleetJob]):
+        """Partition the queue into same-program groups big enough for
+        the compiled tier, and the mixed remainder."""
+        groups: dict[tuple, list[FleetJob]] = {}
+        for j in jobs:
+            groups.setdefault((program_key(j.image), j.threads),
+                              []).append(j)
+        compiled: list[tuple[Any, list[FleetJob]]] = []
+        rest: list[FleetJob] = []
+        for group in groups.values():
+            if len(group) < self.compile_min:
+                rest.extend(group)
+                continue
+            try:
+                cp = compile_program(group[0].image, group[0].threads,
+                                     validate=self.validate)
+            except BlockCompileError:
+                rest.extend(group)
+                continue
+            compiled.append((cp, group))
+        return compiled, rest
+
+    def _collect(self, final: MachineState, batch: list[FleetJob],
+                 real: int, wall: float,
+                 results: dict[int, JobResult]) -> None:
+        """Slice per-job results out of a batched final state (one host
+        transfer per leaf, then pure-NumPy scatter to jobs)."""
+        shared = np.asarray(final.shared)
+        cycles = np.asarray(final.cycles)
+        steps = np.asarray(final.steps)
+        hv = np.asarray(final.hazard_violations)
+        stat_c = np.asarray(final.stat_cycles)
+        stat_i = np.asarray(final.stat_instrs)
+        self.stats.batches += 1
+        self.stats.pad_slots += len(batch) - real
+        self.stats.wall_s += wall
+        for i, job in enumerate(batch[:real]):
+            res = JobResult(
+                handle=job.handle, tag=job.tag, cycles=int(cycles[i]),
+                steps=int(steps[i]),
+                time_us=self.cfg.cycles_to_us(int(cycles[i])),
+                hazard_violations=int(hv[i]), shared=shared[i],
+                stat_cycles=stat_c[i], stat_instrs=stat_i[i])
+            results[job.handle] = res
+            self.stats.jobs += 1
+            self.stats.total_cycles += res.cycles
+            self.stats.total_steps += res.steps
+
+    @staticmethod
+    def _bucket(n: int, cap: int) -> int:
+        """Pad a compiled batch to the next power of two (capped at the
+        fleet batch size) so jit shape-cache entries stay bounded."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, cap)
+
     def drain(self) -> dict[int, JobResult]:
         """Run every queued job; returns ``{handle: JobResult}``."""
         results: dict[int, JobResult] = {}
-        for batch in self._batches():
+        jobs = self._queue
+        self._queue = []
+
+        compiled_groups: list = []
+        if self.use_compiler:
+            compiled_groups, jobs = self._split_compilable(jobs)
+
+        # --- compiled tier: same program, lock-step batched data -------
+        for cp, group in compiled_groups:
+            for i in range(0, len(group), self.batch_size):
+                chunk = group[i:i + self.batch_size]
+                real = len(chunk)
+                size = self._bucket(real, self.batch_size)
+                pad = size - real
+                chunk = chunk + chunk[:1] * pad       # same-program filler
+                t0 = time.perf_counter()
+                final = cp.run_batch(
+                    [j.shared_init for j in chunk],
+                    [j.tdx_dim for j in chunk])
+                wall = time.perf_counter() - t0
+                self._collect(final, chunk, real, wall, results)
+                self.stats.compiled_jobs += real
+                self.stats.compiled_batches += 1
+
+        # --- interpreter tier: heterogeneous vmapped batches -----------
+        for batch in self._batches(jobs):
             real = len(batch)
             pad = self.batch_size - real
             batch = batch + [self._filler()] * pad
@@ -217,26 +317,6 @@ class FleetScheduler:
             final = fleet_run([j.image for j in batch],
                               _batch_init_state(self.cfg, batch),
                               validate=self.validate)
-            # one host transfer per leaf, then pure-NumPy scatter to jobs
-            shared = np.asarray(final.shared)
-            cycles = np.asarray(final.cycles)
-            steps = np.asarray(final.steps)
-            hv = np.asarray(final.hazard_violations)
-            stat_c = np.asarray(final.stat_cycles)
-            stat_i = np.asarray(final.stat_instrs)
             wall = time.perf_counter() - t0
-            self.stats.batches += 1
-            self.stats.pad_slots += pad
-            self.stats.wall_s += wall
-            for i, job in enumerate(batch[:real]):
-                res = JobResult(
-                    handle=job.handle, tag=job.tag, cycles=int(cycles[i]),
-                    steps=int(steps[i]),
-                    time_us=self.cfg.cycles_to_us(int(cycles[i])),
-                    hazard_violations=int(hv[i]), shared=shared[i],
-                    stat_cycles=stat_c[i], stat_instrs=stat_i[i])
-                results[job.handle] = res
-                self.stats.jobs += 1
-                self.stats.total_cycles += res.cycles
-                self.stats.total_steps += res.steps
+            self._collect(final, batch, real, wall, results)
         return results

@@ -1,0 +1,305 @@
+"""Block-compiler tests: compiled execution vs the interpreter.
+
+The contract under test: :func:`repro.core.blockc.run_compiled` (and the
+fleet's compiled lock-step tier) produces final machine states
+**bit-identical** to :func:`repro.core.executor.run_program` — registers,
+shared memory, cycles, steps, PC, predicate/loop/call stacks,
+instruction-mix stats, and the statically-baked hazard rows/violations —
+across the whole program suite and the configuration space (16-bit ALU,
+no-predicate, dp/qp memory).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import (Asm, BlockCompileError, EGPUConfig, Op, Typ,
+                        compile_program, run_compiled, run_program)
+from repro.core import machine as machine_mod
+from repro.fleet import Fleet, FleetScheduler
+from repro.programs import (build_bitonic, build_fft, build_matmul,
+                            build_reduction, build_transpose)
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+#: the satellite configuration axes: 16-bit ALU, no predicates, dp/qp
+CONFIGS = {
+    "dp": CFG,
+    "qp": CFG.replace(memory_mode="qp"),
+    "alu16": CFG.replace(alu_bits=16, shift_bits=16),
+    "nopred": CFG.replace(predicate_levels=0),
+}
+
+
+def _assert_states_equal(ref, got, label):
+    for leaf in ref._fields:
+        r = np.asarray(getattr(ref, leaf))
+        g = np.asarray(getattr(got, leaf))
+        assert np.array_equal(r, g), f"{label}: {leaf} differs"
+
+
+def _suite(cfg):
+    """Every program in repro.programs that this config can assemble."""
+    builders = [
+        lambda: build_reduction(cfg, 32),
+        lambda: build_reduction(cfg, 32, use_dot=True),
+        lambda: build_reduction(cfg, 32, no_dynamic=True),
+        lambda: build_transpose(cfg, 16),
+        lambda: build_matmul(cfg, 8),
+        lambda: build_bitonic(cfg, 16),
+        lambda: build_fft(cfg, 16),
+    ]
+    out = []
+    for b in builders:
+        try:
+            out.append(b())
+        except ValueError:
+            pass            # feature not present in this config
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_equivalence_sweep(name):
+    """Acceptance: compiled == interpreted, bit for bit, every leaf,
+    every suite program, every config axis."""
+    cfg = CONFIGS[name]
+    benches = _suite(cfg)
+    assert benches, name
+    for b in benches:
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        got = run_compiled(b.image, shared_init=b.shared_init,
+                           tdx_dim=b.tdx_dim, fallback=False)
+        _assert_states_equal(ref, got, f"{name}/{b.name}")
+
+
+def test_equivalence_validate_false():
+    """The fast path (no hazard checker, no stat counters) matches
+    run_program(validate=False) exactly too."""
+    b = build_reduction(CFG, 32)
+    ref = run_program(b.image, validate=False, shared_init=b.shared_init,
+                      tdx_dim=b.tdx_dim)
+    got = run_compiled(b.image, validate=False, shared_init=b.shared_init,
+                       tdx_dim=b.tdx_dim, fallback=False)
+    _assert_states_equal(ref, got, "validate=False")
+
+
+def test_control_flow_corners():
+    """JSR/RTS nesting, nested predicates with ELSE, and a LOOP chain —
+    the block boundaries the compiler must cut at."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 8)
+    a.lodi(5, 1)
+    a.lodi(6, 0)
+    a.if_("lt", 1, 2, typ=Typ.U32)
+    with a.loop(3):
+        a.jsr("incr")
+    a.else_()
+    a.lodi(6, 99)
+    a.endif()
+    a.sto(6, 1, 0)
+    a.stop()
+    a.label("incr")
+    a.add(6, 6, 5)
+    a.rts()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False)
+    _assert_states_equal(ref, got, "control-flow")
+    # ... and the program actually diverged per-thread
+    out = machine_mod.shared_as_u32(got)[:32]
+    exp = np.where(np.arange(32) < 8, 3, 99)
+    assert np.array_equal(out, exp)
+
+
+def test_hazard_violations_baked_statically():
+    """An unscheduled RAW program: the statically-computed violation
+    count and hazard rows equal the interpreter's dynamic checker."""
+    a = Asm(CFG)
+    a.lodi(1, 7, tsc="mcu")
+    a.add(2, 1, 1, tsc="mcu")      # reads r1 one cycle after LODI: hazard
+    a.stop()
+    img = a.assemble(threads_active=32, schedule_nops=False)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False)
+    assert int(ref.hazard_violations) > 0
+    _assert_states_equal(ref, got, "hazard")
+
+
+def test_non_halting_program_falls_back():
+    """A program that never halts within max_steps is rejected by the
+    compiler and routed to the interpreter by run_compiled."""
+    cfg = CFG.replace(max_steps=64)
+    a = Asm(cfg)
+    a.label("spin")
+    a.add(1, 1, 1)
+    a.jmp("spin")
+    img = a.assemble(threads_active=32)
+    with pytest.raises(BlockCompileError):
+        compile_program(img)
+    # the rejection is negative-cached: the second attempt must raise
+    # without re-walking the static path (no way to observe the walk
+    # directly, but the cached object identity is pinned)
+    with pytest.raises(BlockCompileError):
+        compile_program(img)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32)      # fallback=True default
+    _assert_states_equal(ref, got, "fallback")
+    assert int(got.steps) == 64
+
+
+def test_predicate_ops_in_predicate_less_config():
+    """The interpreter emulates a one-level predicate stack even when
+    cfg.predicate_levels == 0 (D clamps to 1); the compiler must too.
+    The assembler's if_ helper refuses such programs, so emit raw."""
+    cfg = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2,
+                     predicate_levels=0)
+    a = Asm(cfg)
+    a.tdx(1)
+    a.lodi(2, 8)
+    a.emit(Op.IF_LT, ra=1, rb=2, typ=Typ.U32)
+    a.lodi(3, 1)
+    a.emit(Op.ELSE)
+    a.lodi(3, 2)
+    a.emit(Op.ENDIF)
+    a.sto(3, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False)
+    _assert_states_equal(ref, got, "nopred-if")
+
+
+def test_jmp_into_stop_padding():
+    """A JMP past the last instruction lands in the padded STOP tail;
+    the compiler's shared pad block must mirror the interpreter."""
+    a = Asm(CFG)
+    a.lodi(1, 5)
+    a.jmp(40)                      # into the [n, padded_len) STOP rows
+    a.stop()
+    img = a.assemble(threads_active=32, schedule_nops=False)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False)
+    _assert_states_equal(ref, got, "pad-jmp")
+    assert bool(got.halted)
+
+
+# ---------------------------------------------------------------------------
+# Fleet: the compiled lock-step tier
+# ---------------------------------------------------------------------------
+
+def test_fleet_groups_same_program_jobs():
+    """Same-program jobs (different data) run the compiled tier; the
+    per-job results are bit-identical to run_program."""
+    b = build_reduction(CFG, 32)
+    rng = np.random.default_rng(7)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(9)]
+    fleet = Fleet(CFG, batch_size=4)
+    hs = [fleet.submit(b.image, d, tdx_dim=b.tdx_dim) for d in datas]
+    results = fleet.drain()
+    assert fleet.stats.compiled_jobs == 9
+    assert fleet.stats.jobs == 9
+    # 9 jobs at batch 4 -> chunks 4+4+1 (pow2 buckets), all compiled
+    assert fleet.stats.compiled_batches == 3
+    for d, h in zip(datas, hs):
+        ref = run_program(b.image, shared_init=d, tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
+        assert int(ref.cycles) == results[h].cycles
+        assert int(ref.steps) == results[h].steps
+        assert results[h].profile() == machine_mod.profile(ref)
+        assert results[h].hazard_violations == 0
+
+
+def test_fleet_mixed_batch_falls_back_to_interpreter():
+    """Below compile_min, or with per-job thread counts differing, jobs
+    stay on the interpreter tier — and results still match."""
+    b1 = build_reduction(CFG, 32)
+    b2 = build_transpose(CFG, 16)
+    sched = FleetScheduler(CFG, batch_size=4, compile_min=2)
+    h1 = sched.submit(b1.image, b1.shared_init, tdx_dim=b1.tdx_dim)
+    h2 = sched.submit(b2.image, b2.shared_init, tdx_dim=b2.tdx_dim)
+    results = sched.drain()
+    assert sched.stats.compiled_jobs == 0      # singletons: interpreter
+    for b, h in ((b1, h1), (b2, h2)):
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32()), b.name
+
+
+def test_fleet_mixed_tiers_in_one_drain():
+    """A drain mixing a compiled group with interpreter leftovers."""
+    b1 = build_reduction(CFG, 32)
+    b2 = build_transpose(CFG, 16)
+    b3 = build_fft(CFG, 16)
+    fleet = Fleet(CFG, batch_size=8, compile_min=3)
+    handles = []
+    jobs = [b1, b1, b1, b1, b2, b3]            # 4x same program + 2 mixed
+    for b in jobs:
+        handles.append(fleet.submit(b.image, b.shared_init,
+                                    tdx_dim=b.tdx_dim))
+    results = fleet.drain()
+    assert fleet.stats.compiled_jobs == 4
+    assert fleet.stats.jobs == 6
+    for b, h in zip(jobs, handles):
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32()), b.name
+        assert int(ref.cycles) == results[h].cycles
+
+
+def test_compiled_batch_tdx_dims_vary():
+    """TDX grid is per-job data even on the compiled tier."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.tdy(2)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    fleet = Fleet(CFG, batch_size=4)
+    hs = [fleet.submit(img, tdx_dim=d) for d in (4, 8, 16, 32)]
+    results = fleet.drain()
+    assert fleet.stats.compiled_jobs == 4
+    for d, h in zip((4, 8, 16, 32), hs):
+        ref = run_program(img, tdx_dim=d)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32()), d
+
+
+# ---------------------------------------------------------------------------
+# Property test: random straight-line programs
+# ---------------------------------------------------------------------------
+
+_ALU = [Op.ADD, Op.SUB, Op.NEG, Op.ABS, Op.MUL16LO, Op.MUL16HI,
+        Op.MUL24LO, Op.MUL24HI, Op.AND, Op.OR, Op.XOR, Op.NOT, Op.CNOT,
+        Op.BVS, Op.SHL, Op.SHR, Op.POP, Op.MAX, Op.MIN, Op.FADD, Op.FSUB,
+        Op.FNEG, Op.FABS, Op.FMUL, Op.FMAX, Op.FMIN, Op.LOD, Op.STO,
+        Op.LODI, Op.TDX, Op.TDY]
+
+instr_st = st.tuples(st.sampled_from(_ALU), st.sampled_from([Typ.U32,
+                                                             Typ.I32]),
+                     st.integers(0, 31), st.integers(0, 31),
+                     st.integers(0, 31), st.integers(-64, 64))
+
+
+@given(st.lists(instr_st, min_size=1, max_size=40),
+       st.lists(st.integers(0, 0xFFFFFFFF), min_size=32, max_size=32))
+@settings(max_examples=10, deadline=None)
+def test_random_straight_line_programs_match(instrs, seed_words):
+    """Hypothesis: arbitrary straight-line op soup (random registers,
+    random immediates, aliasing reads/writes, out-of-range addresses)
+    is bit-identical between the two tiers."""
+    a = Asm(CFG)
+    for (op, typ, rd, ra, rb, imm) in instrs:
+        a.emit(op, typ=typ, rd=rd, ra=ra, rb=rb,
+               imm=imm if op in (Op.LOD, Op.STO, Op.LODI) else 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    buf = np.array(seed_words, np.uint32)
+    ref = run_program(img, shared_init=buf, tdx_dim=16)
+    got = run_compiled(img, shared_init=buf, tdx_dim=16, fallback=False)
+    _assert_states_equal(ref, got, "random")

@@ -37,15 +37,20 @@ def _suite():
 
 def test_32_core_fleet_bit_identical_to_sequential():
     """Acceptance: >= 32 heterogeneous jobs, one vmapped dispatch per
-    batch, bit-identical shared memory / cycles / steps, zero hazards."""
+    batch, bit-identical shared memory / cycles / steps, zero hazards.
+
+    ``use_compiler=False`` pins the interpreter tier's packing contract;
+    the block-compiled tier has its own suite in ``test_blockc.py``.
+    """
     benches = _suite()
     jobs = [benches[i % len(benches)] for i in range(32)]
-    fleet = Fleet(CFG, batch_size=32)
+    fleet = Fleet(CFG, batch_size=32, use_compiler=False)
     handles = [fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
                             tag=b.name) for b in jobs]
     results = fleet.drain()
     assert fleet.stats.batches == 1          # one dispatch for all 32
     assert fleet.stats.jobs == 32
+    assert fleet.stats.compiled_jobs == 0
     for b, h in zip(jobs, handles):
         st = run_program(b.image, shared_init=b.shared_init,
                          tdx_dim=b.tdx_dim)
@@ -111,9 +116,11 @@ def test_mixed_thread_counts_and_personalities():
 
 
 def test_scheduler_packs_partial_batches():
-    """5 jobs at batch 4 -> two dispatches, filler slots excluded."""
+    """5 jobs at batch 4 -> two dispatches, filler slots excluded
+    (interpreter tier; the compiled tier pads with same-program slots
+    and is covered in ``test_blockc.py``)."""
     b = build_reduction(CFG, 32)
-    sched = FleetScheduler(CFG, batch_size=4)
+    sched = FleetScheduler(CFG, batch_size=4, use_compiler=False)
     hs = [sched.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
           for _ in range(5)]
     assert sched.pending == 5

@@ -45,3 +45,23 @@ def test_tsc_personalities():
     assert isa.tsc_depth(isa.TSC_MCU) == isa.DEPTH_WF0
     with pytest.raises(ValueError):
         isa.tsc_encode(3, 0)        # undefined width coding (Table 3)
+
+
+def test_pred_write_ops_pin_enum_layout():
+    """Regression for the predicate-hazard writer gate: it must be
+    derived from PRED_WRITE_OPS, whose membership is exactly the ops
+    that modify predicate state — the 18 IF.cc cases plus ELSE/ENDIF.
+    Pins the enum layout so growing Op past ENDIF cannot silently tag a
+    new sequencer op as a predicate writer (the old ``op >= IF_EQ``
+    comparison would have)."""
+    expected = {op for op in isa.Op if op.name.startswith("IF_")} \
+        | {isa.Op.ELSE, isa.Op.ENDIF}
+    assert isa.PRED_WRITE_OPS == frozenset(expected)
+    assert len(isa.PRED_WRITE_OPS) == 20
+    # today the members happen to be the contiguous tail of the enum;
+    # the set (not that coincidence) is what the executor/assembler use
+    assert sorted(isa.PRED_WRITE_OPS) == list(range(int(isa.Op.IF_EQ),
+                                                    int(isa.Op.ENDIF) + 1))
+    assert isa.Op.STOP not in isa.PRED_WRITE_OPS
+    assert isa.Op.NOP not in isa.PRED_WRITE_OPS
+    assert isa.IF_OPS < isa.PRED_WRITE_OPS
