@@ -1,0 +1,277 @@
+"""Superblock benchmark: LOOP back-edges with and without unrolling.
+
+The loop-heavy half of the suite is where the basic-block driver pays a
+``lax.switch`` dispatch on every LOOP back-edge; the superblock tier
+folds the static path and pays none.  Three tiers, head to head, on a
+loop-heavy program mix:
+
+  * the interpreter (``run_program`` — reference semantics),
+  * the basic-block driver (``mode="blocks"`` — PR-2 behaviour),
+  * the superblock runner (``mode="superblock"``),
+
+with results asserted bit-identical before any timing, plus a fleet
+drain of same-program loop jobs to exercise the scheduler's superblock
+tier.  Results are merged into ``BENCH_compiled.json`` under the
+``"superblock"`` key.
+
+  PYTHONPATH=src python -m benchmarks.superblock            # full
+  PYTHONPATH=src python -m benchmarks.superblock --smoke    # CI gate
+
+``--smoke`` **fails the build** (exit 1) when a loop-heavy program stops
+landing on the superblock tier (a dispatch-count regression: its switch
+dispatches must be 0 while the blocks tier's are > 0) or when the
+aggregate superblock speedup over the basic-block tier regresses below
+the gate threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.compiled import _time  # noqa: E402
+from benchmarks.fleet import fleet_config  # noqa: E402
+from repro.core import Asm, compile_program, run_program  # noqa: E402
+from repro.core.blockc import _sched_insts, _trace_cost  # noqa: E402
+from repro.fleet import Fleet  # noqa: E402
+from repro.programs import build_matmul, build_transpose  # noqa: E402
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: --smoke gate: the superblock tier must keep at least this aggregate
+#: speedup over the basic-block driver on the loop-heavy mix ...
+SMOKE_MIN_SPEEDUP = 1.2
+#: ... and every mix program must land on the superblock tier (its
+#: switch-dispatch count is 0 by construction; the blocks tier's > 0).
+
+
+class _Bench:
+    def __init__(self, name, image, shared_init=None, tdx_dim=16):
+        self.name = name
+        self.image = image
+        self.shared_init = shared_init
+        self.tdx_dim = tdx_dim
+
+
+def _loop_saxpy(cfg, iters: int) -> _Bench:
+    """y[t] = a*y[t] + x[t], ``iters`` times — one LOOP back-edge per
+    iteration, the pure back-edge-dispatch stress test."""
+    a = Asm(cfg)
+    a.tdx(1)
+    a.lod(2, 1, 0)                  # x[t]
+    a.lod(3, 1, 32)                 # y[t]
+    with a.loop(iters):
+        a.fmul(3, 3, 4)
+        a.fadd(3, 3, 2)
+    a.sto(3, 1, 32)
+    a.stop()
+    rng = np.random.default_rng(iters)
+    data = rng.standard_normal(64).astype(np.float32)
+    return _Bench(f"loop_saxpy_{iters}", a.assemble(threads_active=32),
+                  shared_init=data, tdx_dim=32)
+
+
+def _loop_nested(cfg, outer: int, inner: int) -> _Bench:
+    """Nested LOOPs: the folded schedule is a repeat inside a repeat."""
+    a = Asm(cfg)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.lodi(5, 3)
+    with a.loop(outer):
+        with a.loop(inner):
+            a.add(2, 2, 5)
+        a.xor(2, 2, 1)
+    a.sto(2, 1, 0)
+    a.stop()
+    data = np.arange(32, dtype=np.uint32)
+    return _Bench(f"loop_nested_{outer}x{inner}",
+                  a.assemble(threads_active=32), shared_init=data,
+                  tdx_dim=32)
+
+
+def _suite(cfg, smoke: bool) -> list[_Bench]:
+    """Loop-heavy mix: every program's executed path crosses a LOOP
+    back-edge many times (the regime the superblock tier targets)."""
+    mm = build_matmul(cfg, 8)
+    tr = build_transpose(cfg, 16)
+    out = [
+        _Bench(mm.name, mm.image, mm.shared_init, mm.tdx_dim),
+        _Bench(tr.name, tr.image, tr.shared_init, tr.tdx_dim),
+        _loop_saxpy(cfg, 512),
+    ]
+    if not smoke:
+        # the small-iteration cases document the crossover: below a few
+        # hundred back-edges the fixed trace overhead can eat the
+        # dispatch win on CPU (the full JSON keeps both data points)
+        out += [_loop_saxpy(cfg, 64), _loop_saxpy(cfg, 1024),
+                _loop_nested(cfg, 32, 16)]
+    return out
+
+
+def _assert_bit_identical(b, cps):
+    ref = run_program(b.image, shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    for label, cp in cps.items():
+        got = cp.run(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+        for leaf in ref._fields:
+            assert np.array_equal(np.asarray(getattr(ref, leaf)),
+                                  np.asarray(getattr(got, leaf))), \
+                f"{b.name}/{label}: {leaf} differs from the interpreter"
+
+
+def bench_single_core(cfg, smoke: bool, repeats: int) -> list[dict]:
+    rows = []
+    tot = {"interp": 0.0, "blocks": 0.0, "super": 0.0}
+    for b in _suite(cfg, smoke):
+        cps = {
+            "blocks": compile_program(b.image, mode="blocks"),
+            # auto, NOT mode="superblock": if the program ever stops
+            # fitting the trace budget this compiles to the blocks tier
+            # with switch_dispatches > 0, which the smoke gate reports
+            # as a dispatch regression instead of crashing
+            "super": compile_program(b.image, mode="auto"),
+        }
+        _assert_bit_identical(b, cps)
+        run = dict(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+        ti = _time(lambda: run_program(b.image, **run), repeats)
+        tb = _time(lambda: cps["blocks"].run(**run), repeats)
+        ts = _time(lambda: cps["super"].run(**run), repeats)
+        tot["interp"] += ti
+        tot["blocks"] += tb
+        tot["super"] += ts
+        sched = cps["super"].schedule
+        rows.append({
+            "name": b.name,
+            "steps": cps["super"].sim.steps,
+            "dispatches_blocks": cps["blocks"].switch_dispatches,
+            "dispatches_super": cps["super"].switch_dispatches,
+            "sched_insts": _sched_insts(sched) if sched else None,
+            "trace_cost": _trace_cost(sched) if sched else None,
+            "interp_us": round(ti * 1e6, 1),
+            "blocks_us": round(tb * 1e6, 1),
+            "super_us": round(ts * 1e6, 1),
+            "speedup_vs_blocks": round(tb / ts, 2),
+            "speedup_vs_interp": round(ti / ts, 2),
+            "bit_identical": True,
+        })
+    rows.append({
+        "name": "aggregate",
+        "interp_us": round(tot["interp"] * 1e6, 1),
+        "blocks_us": round(tot["blocks"] * 1e6, 1),
+        "super_us": round(tot["super"] * 1e6, 1),
+        "speedup_vs_blocks": round(tot["blocks"] / tot["super"], 2),
+        "speedup_vs_interp": round(tot["interp"] / tot["super"], 2),
+    })
+    return rows
+
+
+def bench_fleet(cfg, smoke: bool, batch: int, repeats: int) -> dict:
+    """Same-program loop jobs through the scheduler: all of them must
+    land on the superblock tier (stats.superblock_jobs == jobs)."""
+    b = _loop_saxpy(cfg, 64)
+    n_jobs = batch * (2 if smoke else 8)
+    rng = np.random.default_rng(0)
+    datas = [rng.standard_normal(64).astype(np.float32)
+             for _ in range(n_jobs)]
+
+    def once():
+        fleet = Fleet(cfg, batch_size=batch)
+        for d in datas:
+            fleet.submit(b.image, d, tdx_dim=b.tdx_dim)
+        t0 = time.perf_counter()
+        fleet.drain()
+        assert fleet.stats.superblock_jobs == n_jobs
+        return time.perf_counter() - t0
+
+    once()                                 # warm compiles
+    jps = n_jobs / min(once() for _ in range(repeats))
+    return {"mix": "loop_saxpy", "batch": batch, "jobs": n_jobs,
+            "superblock_jobs_per_sec": round(jps, 1)}
+
+
+def bench(smoke: bool = False, batch: int = 32,
+          repeats: int | None = None) -> dict:
+    cfg = fleet_config()
+    repeats = repeats or (2 if smoke else 5)
+    return {
+        "single_core": bench_single_core(cfg, smoke, repeats),
+        "fleet": [bench_fleet(cfg, smoke, batch, max(2, repeats // 2))],
+    }
+
+
+def rows_csv(out: dict) -> list[tuple]:
+    rows = []
+    for r in out["single_core"]:
+        rows.append((f"superblock/{r['name']}", r["super_us"],
+                     f"blocks_us={r['blocks_us']};"
+                     f"interp_us={r['interp_us']};"
+                     f"vs_blocks={r['speedup_vs_blocks']}x;"
+                     f"vs_interp={r['speedup_vs_interp']}x"))
+    for r in out.get("fleet", ()):
+        rows.append((f"superblock_fleet/{r['mix']}_batch{r['batch']}",
+                     round(1e6 / r["superblock_jobs_per_sec"], 1),
+                     f"jobs_per_sec={r['superblock_jobs_per_sec']}"))
+    return rows
+
+
+def _merge_json(path: str, out: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["superblock"] = out
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced mix; exit 1 on dispatch/speedup "
+                         "regression")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
+                                                   "BENCH_compiled.json"))
+    args = ap.parse_args()
+
+    out = bench(args.smoke, args.batch, args.repeats)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_csv(out):
+        print(f"{name},{us},{derived}")
+
+    if not args.smoke:      # CI pass: don't clobber the tracked numbers
+        _merge_json(args.json, out)
+        print(f"# merged into {args.json}", file=sys.stderr)
+
+    per_prog = out["single_core"][:-1]
+    agg = out["single_core"][-1]["speedup_vs_blocks"]
+    bad_dispatch = [r["name"] for r in per_prog
+                    if r["dispatches_super"] != 0
+                    or r["dispatches_blocks"] <= 0]
+    print(f"# aggregate superblock-vs-blocks speedup: {agg}x; "
+          f"dispatch regressions: {bad_dispatch or 'none'}",
+          file=sys.stderr)
+    if args.smoke:
+        if bad_dispatch:
+            print(f"# SMOKE FAIL: {bad_dispatch} not on the superblock "
+                  f"tier (switch dispatches must drop to 0)",
+                  file=sys.stderr)
+            sys.exit(1)
+        if agg < SMOKE_MIN_SPEEDUP:
+            print(f"# SMOKE FAIL: need >= {SMOKE_MIN_SPEEDUP}x over the "
+                  f"basic-block tier", file=sys.stderr)
+            sys.exit(1)
+        print("# smoke gate passed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""The eGPU basic-block compiler: specialize execution to the static program.
+"""The eGPU block compiler: specialize execution to the static program.
 
 The interpreter (:mod:`repro.core.executor`) pays full per-instruction
 dispatch cost — a program-row gather, an opcode-metadata gather, and a
@@ -34,10 +34,30 @@ program — so it stays unbatched even in a batched run, and block-to-block
 control flow remains *real* control flow (one switch branch executes)
 instead of vmap's execute-everything-select-one.
 
+On top of the basic-block tier sits the **superblock** tier: because
+LOOP trip counts are INIT immediates, the *entire* execution path is one
+static sequence of blocks, and the per-back-edge ``lax.switch`` dispatch
+the block driver pays is avoidable.  The path simulator folds the
+executed path online into a superblock *schedule* — straight-line pc
+runs plus ``(body, count)`` repeat nodes at LOOP back-edges (fold is
+equality-guarded, so a first iteration entered mid-body peels off
+naturally and the schedule always flattens back to the exact executed
+path).  The superblock runner traces that schedule with **no
+``while_loop`` and no ``switch`` at all**: repeats small enough for the
+trace budget unroll fully into the surrounding straight line; large
+repeats become a ``lax.fori_loop`` whose body is the loop trace fused
+once.  Every data-independent leaf (PC, cycles, steps, stacks, stats,
+hazards) is baked from the simulation; only registers, shared memory and
+the predicate state are traced.  Programs whose schedule exceeds the
+trace budget fall back to the basic-block driver, and programs the
+compiler rejects entirely fall back to the interpreter:
+superblock → basic blocks → interpreter, bit-identical at every step.
+
 Results are bit-identical to :func:`repro.core.executor.run_program` —
 registers, shared memory, cycles, steps, PC, stats, hazard rows and
-violation count — which the equivalence suite (``tests/test_blockc.py``)
-pins across the program suite and configuration space.
+violation count — which the equivalence suites (``tests/test_blockc.py``,
+``tests/test_superblock.py``) pin across the program suite and
+configuration space.
 """
 from __future__ import annotations
 
@@ -71,6 +91,17 @@ _SEQ_TERM = (int(Op.JMP), int(Op.JSR), int(Op.RTS), int(Op.LOOP),
 #: trace-size bound: longer straight-line runs are split with an
 #: artificial fall-through (keeps per-block XLA compiles bounded)
 _MAX_BLOCK = 192
+
+#: superblock trace budget — total instructions traced per compile
+#: (straight-line runs plus each repeat body once); the generalization
+#: of the per-block ``_MAX_BLOCK`` bound to whole-path traces.  Programs
+#: over budget fall back to the basic-block driver.
+_MAX_TRACE = 4096
+
+#: a repeat whose *executed* size is at most this unrolls fully into the
+#: surrounding straight line (maximum fusion); larger repeats run as a
+#: ``lax.fori_loop`` over the once-traced body.
+_UNROLL_FULL = 256
 
 #: host-side path-simulation bound (a program must halt within
 #: ``min(cfg.max_steps, _SIM_CAP)`` to be block-compilable)
@@ -152,6 +183,123 @@ def _decompose(packed: np.ndarray, n: int) -> list[tuple[int, int]]:
 
 
 # ---------------------------------------------------------------------------
+# Superblock schedules: the compressed static path
+# ---------------------------------------------------------------------------
+#
+# A *schedule* is a tuple of items; an item is an ``int`` pc (execute
+# that instruction) or ``("rep", body, count)`` where ``body`` is itself
+# a schedule executed ``count`` times.  Flattening a schedule always
+# reproduces the exact executed path — folding is equality-guarded.
+
+def _sched_insts(items) -> int:
+    """Instruction slots a schedule *traces* (each repeat body once)."""
+    n = 0
+    for it in items:
+        n += 1 if isinstance(it, (int, np.integer)) else _sched_insts(it[1])
+    return n
+
+
+def _sched_execd(items) -> int:
+    """Instructions a schedule *executes* (repeat bodies times count)."""
+    n = 0
+    for it in items:
+        if isinstance(it, (int, np.integer)):
+            n += 1
+        else:
+            n += it[2] * _sched_execd(it[1])
+    return n
+
+
+def _trace_cost(items) -> int:
+    """Instructions the superblock runner will actually trace, given the
+    full-unroll policy (small repeats inline ``count`` times, large ones
+    trace the body once under ``lax.fori_loop``)."""
+    c = 0
+    for it in items:
+        if isinstance(it, (int, np.integer)):
+            c += 1
+        else:
+            ex = it[2] * _sched_execd(it[1])
+            c += ex if ex <= _UNROLL_FULL else _trace_cost(it[1])
+    return c
+
+
+class _PathRecorder:
+    """Online fold of the executed path into a superblock schedule.
+
+    Every executed pc is appended to the open schedule; at each LOOP
+    back-edge the just-completed iteration is compared against the
+    previous one (or an already-open repeat node) and folded when equal.
+    A first iteration entered mid-body simply fails the comparison and
+    stays inline — a free peel.  All mutations preserve the invariant
+    that the schedule flattens to the exact executed path, so bookkeeping
+    confusion (unbalanced INIT/LOOP, JMP out of a loop) can only cost
+    compression, never correctness.  Recording bails out (``schedule()``
+    returns None) when the retained size exceeds the trace budget or a
+    LOOP fires with no open loop instance.
+    """
+
+    def __init__(self, cap: int):
+        self._cap = cap
+        self._items: list = []
+        self._insts = 0             # instruction slots currently retained
+        self._dead = False
+        self._loops: list[dict] = []   # parallels the simulator loop stack
+
+    def _bail(self) -> None:
+        self._dead = True
+        self._items = []
+        self._loops = []
+
+    def step(self, pc: int) -> None:
+        if self._dead:
+            return
+        self._items.append(pc)
+        self._insts += 1
+        if self._insts > 2 * self._cap:
+            self._bail()
+
+    def on_init(self) -> None:
+        if self._dead:
+            return
+        self._loops.append({"iter_start": len(self._items), "cand": None,
+                            "cand_start": 0, "rep_idx": None})
+
+    def on_loop(self, taken: bool) -> None:
+        """Called after the LOOP pc itself was recorded via ``step``."""
+        if self._dead:
+            return
+        if not self._loops:
+            self._bail()                 # unbalanced LOOP: give up folding
+            return
+        inst = self._loops[-1]
+        cur = self._items
+        seg = tuple(cur[inst["iter_start"]:])
+        ri = inst["rep_idx"]
+        if ri is not None and cur[ri][1] == seg:
+            cur[ri] = ("rep", seg, cur[ri][2] + 1)
+            del cur[inst["iter_start"]:]
+            self._insts -= _sched_insts(seg)
+        elif inst["cand"] == seg:
+            del cur[inst["cand_start"]:]
+            cur.append(("rep", seg, 2))
+            self._insts -= _sched_insts(seg)
+            inst["rep_idx"] = len(cur) - 1
+            inst["cand"] = None
+            inst["iter_start"] = len(cur)
+        else:
+            inst["cand"] = seg
+            inst["cand_start"] = inst["iter_start"]
+            inst["rep_idx"] = None
+            inst["iter_start"] = len(cur)
+        if not taken:
+            self._loops.pop()
+
+    def schedule(self) -> tuple | None:
+        return None if self._dead else tuple(self._items)
+
+
+# ---------------------------------------------------------------------------
 # Static path simulation: sequencer + cycles + hazard checker, on the host
 # ---------------------------------------------------------------------------
 
@@ -160,15 +308,29 @@ class _SimResult(NamedTuple):
     cycles: int
     hazard: np.ndarray          # (R+2, 4) int32 — final checker rows
     violations: int
+    pc: int                     # final PC
+    halted: bool
+    lctr: np.ndarray            # (LD,) int32 — final loop-counter stack
+    lsp: int
+    cstack: np.ndarray          # (CD,) int32 — final call stack
+    csp: int
+    stat_cycles: np.ndarray     # (NUM_OP_CLASSES,) int32
+    stat_instrs: np.ndarray
+    dispatches: int             # block-driver switch dispatches on this path
+    schedule: tuple | None      # folded superblock schedule (None: too big)
 
 
 def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
-              threads: int, validate: bool) -> _SimResult:
+              threads: int, validate: bool, *,
+              block_starts: frozenset = frozenset(),
+              n_real: int | None = None) -> _SimResult:
     """Walk the (fully static) execution path once, mirroring the
     interpreter's sequencer, cycle accounting and hazard checker
-    bit-for-bit.  Raises :class:`BlockCompileError` if the program does
-    not halt before ``cfg.max_steps`` (the interpreter would then stop
-    mid-block, which the block driver cannot reproduce)."""
+    bit-for-bit, while folding the path into a superblock schedule and
+    counting the block-driver dispatches it would cost.  Raises
+    :class:`BlockCompileError` if the program does not halt before
+    ``cfg.max_steps`` (the interpreter would then stop mid-block, which
+    neither compiled driver can reproduce)."""
     t = tables_np(cfg)
     R = cfg.regs_per_thread
     LD, CD = cfg.max_loop_depth, cfg.max_call_depth
@@ -182,6 +344,11 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
     halted = False
     cap = min(cfg.max_steps, _SIM_CAP)
     L = packed.shape[0]
+    n_real = prog_len if n_real is None else n_real
+    stat_c = [0] * isa.NUM_OP_CLASSES
+    stat_i = [0] * isa.NUM_OP_CLASSES
+    dispatches = 0
+    rec = _PathRecorder(_MAX_TRACE)
 
     while (not halted) and steps < cfg.max_steps and 0 <= pc < prog_len:
         if steps >= cap:
@@ -195,6 +362,11 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
         scalar = bool(t[op, _TC_SCALAR])
         writes_rd = bool(t[op, _TC_WRITES_RD])
         issue = 1 if scalar else per_wf * wfs
+        rec.step(pc)
+        if pc >= n_real or pc in block_starts:
+            dispatches += 1
+        stat_c[int(t[op, _TC_CLS])] += issue
+        stat_i[int(t[op, _TC_CLS])] += 1
 
         if validate:
             rows = [hz[_gidx(ra, R + 2)], hz[_gidx(rb, R + 2)],
@@ -239,11 +411,13 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
             else:
                 lsp -= 1
                 pc += 1
+            rec.on_loop(ltop > 0)
         elif op == Op.INIT:
             if 0 <= lsp < LD:
                 lctr[lsp] = imm
             lsp += 1
             pc += 1
+            rec.on_init()
         else:
             if op == Op.STOP:
                 halted = True
@@ -254,8 +428,16 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
     if (not halted) and steps >= cfg.max_steps and 0 <= pc < prog_len:
         raise BlockCompileError(
             f"program did not halt within max_steps={cfg.max_steps}")
-    return _SimResult(steps=steps, cycles=cycles,
-                      hazard=hz.astype(np.int32), violations=violations)
+    return _SimResult(
+        steps=steps, cycles=cycles, hazard=hz.astype(np.int32),
+        violations=violations, pc=_i32wrap(pc), halted=halted,
+        lctr=np.asarray([_i32wrap(v) for v in lctr], np.int32),
+        lsp=_i32wrap(lsp),
+        cstack=np.asarray([_i32wrap(v) for v in cstack], np.int32),
+        csp=_i32wrap(csp),
+        stat_cycles=np.asarray([_i32wrap(v) for v in stat_c], np.int32),
+        stat_instrs=np.asarray([_i32wrap(v) for v in stat_i], np.int32),
+        dispatches=dispatches, schedule=rec.schedule())
 
 
 # ---------------------------------------------------------------------------
@@ -293,19 +475,31 @@ class _Seq(NamedTuple):
 # ---------------------------------------------------------------------------
 
 class CompiledProgram:
-    """One program, block-compiled for one (config, thread-count) pair.
+    """One program, compiled for one (config, thread-count) pair.
 
     ``run()`` executes a single core; ``run_batch()`` executes N cores in
     lock-step over batched data (same blocks, different data) — the
     fleet's compiled tier.  Fresh states only: the static path (and the
     baked hazard results) assume execution starts at PC 0 with empty
     stacks and zeroed registers, exactly like :func:`init_state`.
+
+    ``mode`` selects the tier: ``"auto"`` (default) uses the superblock
+    runner whenever the folded path fits the trace budget and falls back
+    to the basic-block driver otherwise; ``"superblock"`` requires it
+    (raising :class:`BlockCompileError` when ineligible); ``"blocks"``
+    forces the basic-block driver.  The tier actually chosen is exposed
+    as ``self.mode``, and ``self.switch_dispatches`` counts the
+    block-driver ``lax.switch`` dispatches the program pays on this tier
+    (0 on the superblock tier — that is the point).
     """
 
     def __init__(self, image: ProgramImage, threads: int, *,
-                 validate: bool = True):
+                 validate: bool = True, mode: str = "auto"):
         cfg = image.cfg
-        if threads > cfg.max_threads or threads % cfg.num_sps:
+        if mode not in ("auto", "superblock", "blocks"):
+            raise ValueError(f"unknown compile mode {mode!r}")
+        if threads < 1 or threads > cfg.max_threads \
+                or threads % cfg.num_sps:
             raise ValueError(
                 f"runtime threads {threads} invalid for max "
                 f"{cfg.max_threads}")
@@ -315,9 +509,11 @@ class CompiledProgram:
         self.validate = validate
         self.packed, self.prog_len = pad_image(image)
         self.n = image.n
-        self.sim = _simulate(cfg, self.packed, self.prog_len, threads,
-                             validate)
         self.blocks = _decompose(self.packed, self.n)
+        self.sim = _simulate(
+            cfg, self.packed, self.prog_len, threads, validate,
+            block_starts=frozenset(s for s, _ in self.blocks),
+            n_real=self.n)
         # NOT gated on cfg.has_predicates: the interpreter emulates a
         # one-level stack even for predicate-less configs (D clamps to 1)
         self.has_preds = any(
@@ -328,17 +524,86 @@ class CompiledProgram:
             p2b[s:e] = bi
         self._pc2block = p2b
         self._tables = tables_np(cfg)
-        self._run_jit = self._build_runner()
+        self._tid = np.arange(cfg.max_threads, dtype=np.int32)
+        self._tid0 = self._tid == 0
+        self.schedule = self.sim.schedule
+        eligible = (self.schedule is not None
+                    and _trace_cost(self.schedule) <= _MAX_TRACE)
+        if mode == "superblock" and not eligible:
+            raise BlockCompileError(
+                "program is not superblock-eligible (folded path "
+                f"exceeds the {_MAX_TRACE}-instruction trace budget)")
+        self.mode = "superblock" if eligible and mode != "blocks" \
+            else "blocks"
+        if self.mode == "superblock":
+            self.switch_dispatches = 0
+            self._run_jit = self._build_super_runner()
+        else:
+            self.switch_dispatches = self.sim.dispatches
+            self._run_jit = self._build_runner()
+
+    # ----------------------------------------------------- shared data op
+    def _apply_row(self, row, regs, shared, pstack, pdepth, pok, tdx_dim):
+        """One instruction's *data* semantics — registers, shared memory,
+        predicate state — with every decoded field a Python constant.
+        Sequencer ops (JMP/JSR/RTS/LOOP/INIT/STOP/NOP) are data no-ops:
+        their effects are either handled by the block terminator (basic
+        blocks) or baked statically (superblocks).  ``pok`` is the cached
+        predicate mask, invalidated by predicate writers; shared between
+        both compiled tiers so their semantics cannot drift."""
+        cfg = self.cfg
+        R, S = cfg.regs_per_thread, cfg.shared_words
+        D = max(1, cfg.predicate_levels)
+        t = self._tables
+        (op, typ, rd, ra, rb, imm, tsc) = row
+        o = Op(op)
+        if o in (Op.JMP, Op.JSR, Op.RTS, Op.LOOP, Op.INIT, Op.STOP,
+                 Op.NOP):
+            return regs, shared, pstack, pdepth, pok
+
+        _, tsc_mask = _tsc_static(cfg, tsc, self.threads)
+        if self.has_preds:
+            if pok is None:
+                pok = semantics.pred_ok(pstack, pdepth, D)
+            mask = tsc_mask & pok
+        else:
+            mask = tsc_mask
+        ra_r, rb_r, rd_r = _gidx(ra, R), _gidx(rb, R), _gidx(rd, R)
+        env = semantics.OpEnv(
+            cfg=cfg, rav=regs[..., ra_r], rbv=regs[..., rb_r],
+            rdv=regs[..., rd_r], signed=typ == Typ.I32, imm=imm,
+            mask=mask, tid=self._tid, shared=shared, tdx_dim=tdx_dim)
+        spec = semantics.build_spec(env)
+
+        if o in isa.IF_OPS:
+            cond = spec[op][1]()
+            pstack, pdepth = semantics.pred_push(
+                pstack, pdepth, cond, tsc_mask, D)
+            pok = None
+        elif o == Op.ELSE:
+            pstack = semantics.pred_else(pstack, pdepth, tsc_mask, D)
+            pok = None
+        elif o == Op.ENDIF:
+            pdepth = semantics.pred_pop(pdepth, tsc_mask)
+            pok = None
+        elif o == Op.STO:
+            addr = env.addr
+            sto_ok = mask & (addr >= 0) & (addr < S)
+            sidx = jnp.where(sto_ok, addr, S)
+            shared = semantics.store(shared, sidx, env.rdv)
+        elif t[op, _TC_WRITES_RD]:
+            value = spec[op][0]().astype(_U32)
+            wmask = self._tid0 if o in (Op.DOT, Op.SUM) else mask
+            rd_w = min(max(rd, 0), R - 1)
+            col = jnp.where(wmask, value, regs[..., rd_w])
+            regs = regs.at[..., rd_w].set(col)
+        return regs, shared, pstack, pdepth, pok
 
     # ------------------------------------------------------------- blocks
     def _block_fn(self, start: int, end: int):
         """Trace ``[start, end)`` as one straight-line computation."""
         cfg = self.cfg
-        T, R, S = cfg.max_threads, cfg.regs_per_thread, cfg.shared_words
-        D = max(1, cfg.predicate_levels)
         t = self._tables
-        tid = np.arange(T, dtype=np.int32)
-        tid0 = tid == 0
         rows = [tuple(int(v) for v in self.packed[i])
                 for i in range(start, end)]
         term_op = rows[-1][_PF_OP] if rows[-1][_PF_OP] in _SEQ_TERM else None
@@ -365,56 +630,13 @@ class CompiledProgram:
             pc_next = jnp.int32(end)        # fall-through default
             pok = None                      # cached predicate mask
 
-            for (op, typ, rd, ra, rb, imm, tsc) in rows:
-                o = Op(op)
-                if o in (Op.JMP, Op.STOP, Op.NOP):
-                    continue                # handled below / no state change
-                if o == Op.JSR or o == Op.RTS:
-                    continue                # terminator, handled below
-                if o == Op.LOOP:
-                    continue                # terminator, handled below
-                if o == Op.INIT:
-                    lctr, lsp = semantics.loop_init(lctr, lsp, imm)
+            for row in rows:
+                if row[_PF_OP] == Op.INIT:
+                    lctr, lsp = semantics.loop_init(lctr, lsp,
+                                                    row[_PF_IMM])
                     continue
-
-                _, tsc_mask = _tsc_static(cfg, tsc, self.threads)
-                if self.has_preds:
-                    if pok is None:
-                        pok = semantics.pred_ok(pstack, pdepth, D)
-                    mask = tsc_mask & pok
-                else:
-                    mask = tsc_mask
-                ra_r, rb_r, rd_r = (_gidx(ra, R), _gidx(rb, R),
-                                    _gidx(rd, R))
-                env = semantics.OpEnv(
-                    cfg=cfg, rav=regs[..., ra_r], rbv=regs[..., rb_r],
-                    rdv=regs[..., rd_r], signed=typ == Typ.I32, imm=imm,
-                    mask=mask, tid=tid, shared=shared,
-                    tdx_dim=data.tdx_dim)
-                spec = semantics.build_spec(env)
-
-                if o in isa.IF_OPS:
-                    cond = spec[op][1]()
-                    pstack, pdepth = semantics.pred_push(
-                        pstack, pdepth, cond, tsc_mask, D)
-                    pok = None
-                elif o == Op.ELSE:
-                    pstack = semantics.pred_else(pstack, pdepth, tsc_mask, D)
-                    pok = None
-                elif o == Op.ENDIF:
-                    pdepth = semantics.pred_pop(pdepth, tsc_mask)
-                    pok = None
-                elif o == Op.STO:
-                    addr = env.addr
-                    sto_ok = mask & (addr >= 0) & (addr < S)
-                    sidx = jnp.where(sto_ok, addr, S)
-                    shared = semantics.store(shared, sidx, env.rdv)
-                elif t[op, _TC_WRITES_RD]:
-                    value = spec[op][0]().astype(_U32)
-                    wmask = tid0 if o in (Op.DOT, Op.SUM) else mask
-                    rd_w = min(max(rd, 0), R - 1)
-                    col = jnp.where(wmask, value, regs[..., rd_w])
-                    regs = regs.at[..., rd_w].set(col)
+                regs, shared, pstack, pdepth, pok = self._apply_row(
+                    row, regs, shared, pstack, pdepth, pok, data.tdx_dim)
 
             # --- terminator --------------------------------------------
             imm = rows[-1][_PF_IMM]
@@ -471,6 +693,85 @@ class CompiledProgram:
                 else seq.stat_instrs)
 
         return fn
+
+    # --------------------------------------------------------- superblock
+    def _build_super_runner(self):
+        """The superblock driver: the folded static path, traced as one
+        computation with no ``while_loop`` and no ``switch``.
+
+        Straight-line schedule items trace inline; a repeat node either
+        unrolls fully (small executed size — maximal fusion across the
+        back-edge) or becomes a ``lax.fori_loop`` whose body is the loop
+        trace fused once.  Every data-independent leaf of the final
+        :class:`MachineState` (PC, cycles, steps, loop/call stacks,
+        stats, hazards) is baked from the host-side simulation; only
+        registers, shared memory and the predicate state flow through
+        the trace.  ``pdepth`` is data-independent too but rides along
+        dynamically so unbalanced IF/ENDIF inside a folded loop body
+        stays exact across iterations.
+        """
+        cfg = self.cfg
+        T, R = cfg.max_threads, cfg.regs_per_thread
+        D = max(1, cfg.predicate_levels)
+        sim = self.sim
+        schedule = self.schedule
+        threads = self.threads
+        zeros = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
+        stat_c = sim.stat_cycles if self.validate else zeros
+        stat_i = sim.stat_instrs if self.validate else zeros
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def run(shared, tdx_dim):
+            batch = shared.shape[:-1]          # () or (B,)
+
+            def apply_items(items, state):
+                regs, shared, pstack, pdepth = state
+                pok = None
+                for it in items:
+                    if isinstance(it, (int, np.integer)):
+                        row = tuple(int(v) for v in self.packed[it])
+                        regs, shared, pstack, pdepth, pok = \
+                            self._apply_row(row, regs, shared, pstack,
+                                            pdepth, pok, tdx_dim)
+                        continue
+                    _, body, count = it
+                    st = (regs, shared, pstack, pdepth)
+                    if count * _sched_execd(body) <= _UNROLL_FULL:
+                        for _ in range(count):
+                            st = apply_items(body, st)
+                    else:
+                        st = lax.fori_loop(
+                            0, count,
+                            lambda _, s, _b=body: apply_items(_b, s), st)
+                    regs, shared, pstack, pdepth = st
+                    pok = None             # pstack/pdepth may have moved
+                return regs, shared, pstack, pdepth
+
+            regs, shared_f, pstack, pdepth = apply_items(schedule, (
+                jnp.zeros(batch + (T, R), jnp.uint32), shared,
+                jnp.zeros(batch + (T, D), jnp.bool_),
+                jnp.zeros((T,), _I32)))
+
+            def b(x):   # broadcast a baked leaf over the batch axis
+                x = jnp.asarray(x)
+                return jnp.broadcast_to(x, batch + x.shape)
+
+            return MachineState(
+                regs=regs, shared=shared_f, pstack=pstack,
+                pdepth=b(pdepth), lctr=b(jnp.asarray(sim.lctr)),
+                lsp=b(jnp.int32(sim.lsp)),
+                cstack=b(jnp.asarray(sim.cstack)),
+                csp=b(jnp.int32(sim.csp)), pc=b(jnp.int32(sim.pc)),
+                cycles=b(jnp.int32(sim.cycles)),
+                steps=b(jnp.int32(sim.steps)),
+                halted=b(jnp.bool_(sim.halted)),
+                threads_active=b(jnp.int32(threads)), tdx_dim=tdx_dim,
+                stat_cycles=b(jnp.asarray(stat_c)),
+                stat_instrs=b(jnp.asarray(stat_i)),
+                hazard=b(jnp.asarray(sim.hazard)),
+                hazard_violations=b(jnp.int32(sim.violations)))
+
+        return run
 
     # ------------------------------------------------------------- driver
     def _build_runner(self):
@@ -577,28 +878,52 @@ def program_key(image: ProgramImage) -> bytes:
     return image.words.tobytes()
 
 
+def normalize_threads(image: ProgramImage, threads: int | None) -> int:
+    """``None`` means "the count the image was assembled for"; anything
+    else must be an explicit valid count.  In particular ``threads=0``
+    is rejected rather than silently mapped to the image default (the
+    old ``threads or image.threads_active`` idiom did exactly that)."""
+    if threads is None:
+        return image.threads_active
+    threads = int(threads)
+    if threads < 1:
+        raise ValueError(
+            f"invalid runtime thread count {threads}; pass threads=None "
+            f"for the image default ({image.threads_active})")
+    return threads
+
+
 def compile_program(image: ProgramImage, threads: int | None = None, *,
-                    validate: bool = True) -> CompiledProgram:
-    """Block-compile ``image`` for a static runtime thread count
-    (default: the count it was assembled for).  Compiles are cached on
-    (config, program bytes, threads, validate) — rejections too, so a
-    non-halting program pays its (up to ``max_steps``-long) host-side
+                    validate: bool = True,
+                    mode: str = "auto") -> CompiledProgram:
+    """Compile ``image`` for a static runtime thread count (default: the
+    count it was assembled for).  Compiles are cached on (config,
+    program bytes, threads, validate, mode) with LRU eviction — hits
+    move to the back of the queue, so a hot program is never evicted to
+    keep a cold (or negative-cached) one.  Rejections are cached too, so
+    a non-halting program pays its (up to ``max_steps``-long) host-side
     path walk once, not on every fleet drain.
+
+    ``mode``: ``"auto"`` picks the superblock tier when the folded path
+    fits the trace budget, else the basic-block driver; ``"superblock"``
+    and ``"blocks"`` force a tier (the former raising
+    :class:`BlockCompileError` when ineligible).
 
     Raises :class:`BlockCompileError` for programs whose static path does
     not halt within ``cfg.max_steps``.
     """
-    threads = threads or image.threads_active
-    key = (image.cfg, program_key(image), threads, validate)
-    hit = _CACHE.get(key)
+    threads = normalize_threads(image, threads)
+    key = (image.cfg, program_key(image), threads, validate, mode)
+    hit = _CACHE.pop(key, None)          # pop + reinsert = move-to-end
     if hit is None:
-        if len(_CACHE) >= _CACHE_MAX:
-            _CACHE.pop(next(iter(_CACHE)))
+        while len(_CACHE) >= _CACHE_MAX:
+            _CACHE.pop(next(iter(_CACHE)))     # oldest entry first (LRU)
         try:
-            hit = CompiledProgram(image, threads, validate=validate)
+            hit = CompiledProgram(image, threads, validate=validate,
+                                  mode=mode)
         except BlockCompileError as e:
             hit = e                      # negative-cache the rejection
-        _CACHE[key] = hit
+    _CACHE[key] = hit
     if isinstance(hit, BlockCompileError):
         raise hit
     return hit
@@ -606,21 +931,23 @@ def compile_program(image: ProgramImage, threads: int | None = None, *,
 
 def run_compiled(image: ProgramImage, *, threads: int | None = None,
                  tdx_dim: int = 16, shared_init=None, validate: bool = True,
-                 fallback: bool = True) -> MachineState:
+                 fallback: bool = True, mode: str = "auto") -> MachineState:
     """Execute an assembled program through the block compiler.
 
     Drop-in for ``run_program(image, threads=..., tdx_dim=...,
     shared_init=...)`` — results are bit-identical.  ``fallback=True``
     silently routes programs the compiler rejects (non-halting static
-    path) to the interpreter.
+    path, or over-budget traces under ``mode="superblock"``) to the
+    interpreter, completing the superblock → basic-block → interpreter
+    chain.
     """
+    threads = normalize_threads(image, threads)
     try:
-        cp = compile_program(image, threads, validate=validate)
+        cp = compile_program(image, threads, validate=validate, mode=mode)
     except BlockCompileError:
         if not fallback:
             raise
         from .executor import run_program
-        return run_program(image, validate=validate,
-                           threads=threads or image.threads_active,
+        return run_program(image, validate=validate, threads=threads,
                            tdx_dim=tdx_dim, shared_init=shared_init)
     return cp.run(shared_init=shared_init, tdx_dim=tdx_dim)

@@ -35,7 +35,8 @@ import numpy as np
 from ..core import isa
 from ..core import machine as machine_mod
 from ..core.assembler import Asm, ProgramImage
-from ..core.blockc import BlockCompileError, compile_program, program_key
+from ..core.blockc import (BlockCompileError, compile_program,
+                           normalize_threads, program_key)
 from ..core.config import EGPUConfig
 from ..core.executor import padded_length
 from ..core.machine import MachineState
@@ -101,8 +102,10 @@ class FleetStats:
     total_cycles: int = 0
     total_steps: int = 0
     wall_s: float = 0.0
-    compiled_jobs: int = 0       # jobs run on the block-compiled tier
+    compiled_jobs: int = 0       # jobs run on either compiled tier
     compiled_batches: int = 0
+    superblock_jobs: int = 0     # ... of which on the superblock tier
+    superblock_batches: int = 0
 
     @property
     def jobs_per_sec(self) -> float:
@@ -149,18 +152,24 @@ def _batch_init_state(cfg: EGPUConfig, jobs: list[FleetJob]) -> MachineState:
 class FleetScheduler:
     """FIFO-with-packing job queue over a homogeneous fleet.
 
-    Jobs are executed on one of two tiers:
+    Jobs are executed on one of three tiers:
 
-    * **block-compiled** — same-program jobs (identical instruction
-      words, identical runtime thread count) are grouped into lock-step
-      batches that run the block compiler's batched driver
-      (:meth:`repro.core.blockc.CompiledProgram.run_batch`): different
-      data, same straight-line blocks, no per-instruction dispatch;
+    * **superblock** — same-program jobs (identical instruction words,
+      identical runtime thread count) are grouped into lock-step batches
+      that run the compiler's batched driver
+      (:meth:`repro.core.blockc.CompiledProgram.run_batch`); when the
+      program's folded static path fits the trace budget the driver is
+      the superblock runner — no ``while_loop``, no ``switch``, LOOP
+      back-edges unrolled or ``fori_loop``-fused;
+    * **block-compiled** — same-program groups whose path is over budget
+      run the basic-block ``while_loop`` + ``switch`` driver instead
+      (the compiler picks per program; ``stats.superblock_batches``
+      vs ``stats.compiled_batches`` shows the split);
     * **interpreter** — everything else (mixed leftovers, groups smaller
       than ``compile_min``, programs the compiler rejects) is packed into
       heterogeneous vmapped batches exactly as before.
 
-    Results are bit-identical either way.
+    Results are bit-identical on every tier.
     """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
@@ -178,6 +187,9 @@ class FleetScheduler:
         self._queue: list[FleetJob] = []
         self._next_handle = 0
         self._filler_image: ProgramImage | None = None
+        #: results computed by a drain that later failed — delivered by
+        #: the next successful drain so completed work is never lost
+        self._salvaged: dict[int, JobResult] = {}
 
     # ------------------------------------------------------------- queue
     def submit(self, image: ProgramImage, shared_init=None, *,
@@ -186,7 +198,7 @@ class FleetScheduler:
         """Enqueue a job; returns its handle (stable across drains)."""
         if image.cfg != self.cfg:
             raise ValueError("job config does not match the fleet config")
-        threads = threads or image.threads_active
+        threads = normalize_threads(image, threads)
         if threads > self.cfg.max_threads or threads % self.cfg.num_sps:
             raise ValueError(f"bad runtime thread count {threads}")
         if shared_init is not None \
@@ -281,42 +293,82 @@ class FleetScheduler:
             b *= 2
         return min(b, cap)
 
+    def _run_compiled_unit(self, cp, chunk: list[FleetJob],
+                           results: dict[int, JobResult]) -> None:
+        """One compiled-tier batch: pow2-bucketed, same-program padded."""
+        real = len(chunk)
+        size = self._bucket(real, self.batch_size)
+        pad = size - real
+        chunk = chunk + chunk[:1] * pad           # same-program filler
+        t0 = time.perf_counter()
+        final = cp.run_batch([j.shared_init for j in chunk],
+                             [j.tdx_dim for j in chunk])
+        wall = time.perf_counter() - t0
+        self._collect(final, chunk, real, wall, results)
+        self.stats.compiled_jobs += real
+        self.stats.compiled_batches += 1
+        if cp.mode == "superblock":
+            self.stats.superblock_jobs += real
+            self.stats.superblock_batches += 1
+
+    def _run_interp_unit(self, batch: list[FleetJob],
+                         results: dict[int, JobResult]) -> None:
+        """One interpreter-tier batch: padded with STOP filler jobs."""
+        real = len(batch)
+        pad = self.batch_size - real
+        batch = batch + [self._filler()] * pad
+        t0 = time.perf_counter()
+        final = fleet_run([j.image for j in batch],
+                          _batch_init_state(self.cfg, batch),
+                          validate=self.validate)
+        wall = time.perf_counter() - t0
+        self._collect(final, batch, real, wall, results)
+
     def drain(self) -> dict[int, JobResult]:
-        """Run every queued job; returns ``{handle: JobResult}``."""
-        results: dict[int, JobResult] = {}
-        jobs = self._queue
+        """Run every queued job; returns ``{handle: JobResult}``.
+
+        Crash-safe: if a batch raises, every job whose result has not
+        been collected yet (including the failing batch's) is re-queued
+        in submission order before the exception propagates, and results
+        already computed by the failed drain are stashed and delivered
+        by the next successful ``drain()`` — a failed drain loses no
+        work, computed or queued.
+        """
+        results: dict[int, JobResult] = dict(self._salvaged)
+        self._salvaged = {}
+        all_jobs = self._queue
         self._queue = []
+        units: list[tuple] | None = None
+        idx = 0
 
-        compiled_groups: list = []
-        if self.use_compiler:
-            compiled_groups, jobs = self._split_compilable(jobs)
+        try:
+            jobs = all_jobs
+            compiled_groups: list = []
+            if self.use_compiler:
+                compiled_groups, jobs = self._split_compilable(jobs)
 
-        # --- compiled tier: same program, lock-step batched data -------
-        for cp, group in compiled_groups:
-            for i in range(0, len(group), self.batch_size):
-                chunk = group[i:i + self.batch_size]
-                real = len(chunk)
-                size = self._bucket(real, self.batch_size)
-                pad = size - real
-                chunk = chunk + chunk[:1] * pad       # same-program filler
-                t0 = time.perf_counter()
-                final = cp.run_batch(
-                    [j.shared_init for j in chunk],
-                    [j.tdx_dim for j in chunk])
-                wall = time.perf_counter() - t0
-                self._collect(final, chunk, real, wall, results)
-                self.stats.compiled_jobs += real
-                self.stats.compiled_batches += 1
+            # units hold *real* jobs only (padding happens at run time),
+            # so the units not yet collected are exactly what a failure
+            # must put back on the queue.
+            units = []
+            for cp, group in compiled_groups:
+                for i in range(0, len(group), self.batch_size):
+                    units.append((cp, group[i:i + self.batch_size]))
+            units.extend((None, batch) for batch in self._batches(jobs))
 
-        # --- interpreter tier: heterogeneous vmapped batches -----------
-        for batch in self._batches(jobs):
-            real = len(batch)
-            pad = self.batch_size - real
-            batch = batch + [self._filler()] * pad
-            t0 = time.perf_counter()
-            final = fleet_run([j.image for j in batch],
-                              _batch_init_state(self.cfg, batch),
-                              validate=self.validate)
-            wall = time.perf_counter() - t0
-            self._collect(final, batch, real, wall, results)
+            for idx, (cp, unit_jobs) in enumerate(units):
+                if cp is not None:
+                    self._run_compiled_unit(cp, unit_jobs, results)
+                else:
+                    self._run_interp_unit(unit_jobs, results)
+        except BaseException:
+            if units is None:                  # failed while partitioning
+                unprocessed = list(all_jobs)
+            else:
+                unprocessed = [j for _, us in units[idx:] for j in us
+                               if j.handle not in results]
+            unprocessed.sort(key=lambda j: j.handle)
+            self._queue = unprocessed + self._queue
+            self._salvaged = results           # deliver on the next drain
+            raise
         return results

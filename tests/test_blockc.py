@@ -14,6 +14,7 @@ from _hyp import given, settings, st
 
 from repro.core import (Asm, BlockCompileError, EGPUConfig, Op, Typ,
                         compile_program, run_compiled, run_program)
+from repro.core import blockc
 from repro.core import machine as machine_mod
 from repro.fleet import Fleet, FleetScheduler
 from repro.programs import (build_bitonic, build_fft, build_matmul,
@@ -62,16 +63,19 @@ def _suite(cfg):
 @pytest.mark.parametrize("name", sorted(CONFIGS))
 def test_equivalence_sweep(name):
     """Acceptance: compiled == interpreted, bit for bit, every leaf,
-    every suite program, every config axis."""
+    every suite program, every config axis — on both compiled tiers
+    (``auto`` now prefers the superblock runner, so the basic-block
+    driver is pinned explicitly with ``mode="blocks"``)."""
     cfg = CONFIGS[name]
     benches = _suite(cfg)
     assert benches, name
     for b in benches:
         ref = run_program(b.image, shared_init=b.shared_init,
                           tdx_dim=b.tdx_dim)
-        got = run_compiled(b.image, shared_init=b.shared_init,
-                           tdx_dim=b.tdx_dim, fallback=False)
-        _assert_states_equal(ref, got, f"{name}/{b.name}")
+        for mode in ("auto", "blocks"):
+            got = run_compiled(b.image, shared_init=b.shared_init,
+                               tdx_dim=b.tdx_dim, fallback=False, mode=mode)
+            _assert_states_equal(ref, got, f"{name}/{b.name}/{mode}")
 
 
 def test_equivalence_validate_false():
@@ -184,6 +188,52 @@ def test_jmp_into_stop_padding():
     got = run_compiled(img, tdx_dim=32, fallback=False)
     _assert_states_equal(ref, got, "pad-jmp")
     assert bool(got.halted)
+
+
+def _tiny_prog(value: int):
+    a = Asm(CFG)
+    a.lodi(1, value)
+    a.sto(1, 0, 0)
+    a.stop()
+    return a.assemble(threads_active=32)
+
+
+def test_compile_cache_is_lru_not_fifo():
+    """A cache hit moves the entry to the back of the eviction queue, so
+    a hot program survives while cold entries are evicted first."""
+    imgs = [_tiny_prog(v) for v in (101, 102, 103)]
+    old_max, old_cache = blockc._CACHE_MAX, dict(blockc._CACHE)
+    blockc._CACHE.clear()
+    blockc._CACHE_MAX = 2
+    try:
+        cp_a = compile_program(imgs[0])
+        cp_b = compile_program(imgs[1])
+        assert compile_program(imgs[0]) is cp_a    # hit: A moves to back
+        cp_c = compile_program(imgs[2])            # evicts B (LRU), not A
+        assert compile_program(imgs[0]) is cp_a    # A survived the evict
+        assert compile_program(imgs[2]) is cp_c
+        assert compile_program(imgs[1]) is not cp_b    # B was recompiled
+    finally:
+        blockc._CACHE_MAX = old_max
+        blockc._CACHE.clear()
+        blockc._CACHE.update(old_cache)
+
+
+def test_explicit_zero_threads_rejected():
+    """``threads=0`` must raise, not silently fall back to the image
+    default (the old ``threads or image.threads_active`` behaviour)."""
+    img = _tiny_prog(7)
+    with pytest.raises(ValueError, match="thread count"):
+        compile_program(img, 0)
+    with pytest.raises(ValueError, match="thread count"):
+        run_compiled(img, threads=0)
+    with pytest.raises(ValueError, match="thread count"):
+        run_compiled(img, threads=-16)
+    sched = FleetScheduler(CFG, batch_size=2)
+    with pytest.raises(ValueError, match="thread count"):
+        sched.submit(img, threads=0)
+    # None still means "the image default"
+    assert compile_program(img, None).threads == img.threads_active
 
 
 # ---------------------------------------------------------------------------

@@ -155,6 +155,104 @@ def test_fleet_run_low_level_unstack():
         assert int(core.cycles) == int(st.cycles)
 
 
+def test_drain_requeues_jobs_when_compiled_batch_raises(monkeypatch):
+    """Crash safety: a batch failure mid-drain must not lose queued jobs.
+    The failing batch and everything after it go back on the queue (in
+    submission order) and a later drain retries them successfully."""
+    from repro.core.blockc import CompiledProgram
+
+    b = build_reduction(CFG, 32)
+    rng = np.random.default_rng(5)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(6)]
+    fleet = Fleet(CFG, batch_size=2)
+    hs = [fleet.submit(b.image, d, tdx_dim=b.tdx_dim) for d in datas]
+
+    calls = {"n": 0}
+    real_run_batch = CompiledProgram.run_batch
+
+    def failing_run_batch(self, shared_inits, tdx_dims):
+        calls["n"] += 1
+        if calls["n"] == 2:                 # second batch of the drain
+            raise RuntimeError("injected batch failure")
+        return real_run_batch(self, shared_inits, tdx_dims)
+
+    monkeypatch.setattr(CompiledProgram, "run_batch", failing_run_batch)
+    with pytest.raises(RuntimeError, match="injected"):
+        fleet.drain()
+    # first batch (2 jobs) completed — its results are stashed for the
+    # next drain; the other 4 are back on the queue.  Nothing lost.
+    assert fleet.pending == 4
+    monkeypatch.setattr(CompiledProgram, "run_batch", real_run_batch)
+    results = fleet.drain()
+    assert sorted(results) == sorted(hs)      # salvaged + retried
+    for d, h in zip(datas, hs):
+        ref = run_program(b.image, shared_init=d, tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
+
+
+def test_drain_requeues_jobs_when_interpreter_batch_raises(monkeypatch):
+    """Same contract on the interpreter tier (singletons below
+    compile_min), including a failure on the very first batch."""
+    import repro.fleet.scheduler as sched_mod
+
+    b1 = build_reduction(CFG, 32)
+    b2 = build_transpose(CFG, 16)
+    fleet = Fleet(CFG, batch_size=4)
+    h1 = fleet.submit(b1.image, b1.shared_init, tdx_dim=b1.tdx_dim)
+    h2 = fleet.submit(b2.image, b2.shared_init, tdx_dim=b2.tdx_dim)
+
+    def boom(*a, **k):
+        raise RuntimeError("interpreter tier down")
+
+    monkeypatch.setattr(sched_mod, "fleet_run", boom)
+    with pytest.raises(RuntimeError, match="tier down"):
+        fleet.drain()
+    assert fleet.pending == 2
+    monkeypatch.undo()
+    results = fleet.drain()
+    assert sorted(results) == sorted([h1, h2])
+    for b, h in ((b1, h1), (b2, h2)):
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32()), b.name
+
+
+def test_compiled_tier_pow2_bucketing_and_padding():
+    """The compiled tier pads chunks to the next power of two with
+    same-program filler slots: padded slots must never leak into the
+    results dict, and pad_slots/compiled_batches must stay consistent
+    across chunk splits (11 jobs at batch 4 -> chunks 4+4+3, the last
+    bucketed to 4 with 1 pad slot)."""
+    b = build_reduction(CFG, 32)
+    rng = np.random.default_rng(9)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(11)]
+    sched = FleetScheduler(CFG, batch_size=4)
+    hs = [sched.submit(b.image, d, tdx_dim=b.tdx_dim) for d in datas]
+    results = sched.drain()
+    assert sched.stats.compiled_jobs == 11
+    assert sched.stats.compiled_batches == 3
+    assert sched.stats.pad_slots == 1
+    assert sched.stats.jobs == 11
+    # exactly the submitted handles — no filler handle (-1), no dupes
+    assert sorted(results) == sorted(hs)
+    assert -1 not in results
+    for d, h in zip(datas, hs):
+        ref = run_program(b.image, shared_init=d, tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
+
+    # a 3-job drain buckets to 4 (pow2), again without leaking the pad
+    sched2 = FleetScheduler(CFG, batch_size=8)
+    hs2 = [sched2.submit(b.image, d, tdx_dim=b.tdx_dim)
+           for d in datas[:3]]
+    results2 = sched2.drain()
+    assert sched2.stats.compiled_batches == 1
+    assert sched2.stats.pad_slots == 1          # 3 -> pow2 bucket 4
+    assert sorted(results2) == sorted(hs2)
+
+
 def test_fleet_rejects_mismatched_config():
     other = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2)
     a = Asm(other)

@@ -1,0 +1,346 @@
+"""Superblock-tier tests: the folded static path vs the interpreter.
+
+The contract under test: the superblock runner — LOOP back-edges
+unrolled into straight-line traces or ``fori_loop``-fused, no block
+``switch`` dispatch at all — produces final machine states
+**bit-identical** to :func:`repro.core.executor.run_program` on every
+leaf, across the program suite and the configuration space, exactly like
+the basic-block tier it sits on top of.  Also pinned here: the schedule
+flattening invariant (a folded schedule always executes the exact
+simulated path), the trace-budget fallback to the basic-block driver,
+and the fleet's superblock tier counters.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Asm, BlockCompileError, CompiledProgram, EGPUConfig,
+                        Op, Typ, compile_program, run_compiled, run_program)
+from repro.core import blockc
+from repro.core import machine as machine_mod
+from repro.core.blockc import _sched_execd, _sched_insts, _trace_cost
+from repro.fleet import Fleet
+from repro.programs import (build_bitonic, build_fft, build_matmul,
+                            build_reduction, build_transpose)
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+CONFIGS = {
+    "dp": CFG,
+    "qp": CFG.replace(memory_mode="qp"),
+    "alu16": CFG.replace(alu_bits=16, shift_bits=16),
+    "nopred": CFG.replace(predicate_levels=0),
+}
+
+
+def _assert_states_equal(ref, got, label):
+    for leaf in ref._fields:
+        r = np.asarray(getattr(ref, leaf))
+        g = np.asarray(getattr(got, leaf))
+        assert np.array_equal(r, g), f"{label}: {leaf} differs"
+
+
+def _suite(cfg):
+    builders = [
+        lambda: build_reduction(cfg, 32),
+        lambda: build_reduction(cfg, 32, use_dot=True),
+        lambda: build_reduction(cfg, 32, no_dynamic=True),
+        lambda: build_transpose(cfg, 16),
+        lambda: build_matmul(cfg, 8),
+        lambda: build_bitonic(cfg, 16),
+        lambda: build_fft(cfg, 16),
+    ]
+    out = []
+    for b in builders:
+        try:
+            out.append(b())
+        except ValueError:
+            pass            # feature not present in this config
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_superblock_equivalence_sweep(name):
+    """Acceptance: superblock == interpreter, bit for bit, every leaf,
+    every suite program, every config axis — and the suite actually
+    lands on the superblock tier (zero switch dispatches)."""
+    cfg = CONFIGS[name]
+    benches = _suite(cfg)
+    assert benches, name
+    for b in benches:
+        cp = compile_program(b.image, mode="superblock")
+        assert cp.mode == "superblock", b.name
+        assert cp.switch_dispatches == 0, b.name
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        got = cp.run(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+        _assert_states_equal(ref, got, f"{name}/{b.name}")
+
+
+def test_schedule_flattens_to_the_simulated_path():
+    """The fold invariant: for every suite program the schedule executes
+    exactly ``sim.steps`` instructions, and loop-heavy programs fold to
+    far fewer *traced* instructions than executed ones."""
+    for b in _suite(CFG):
+        cp = compile_program(b.image)
+        assert cp.schedule is not None, b.name
+        assert _sched_execd(cp.schedule) == cp.sim.steps, b.name
+        assert _sched_insts(cp.schedule) <= cp.sim.steps, b.name
+    mm = compile_program(build_matmul(CFG, 8).image)
+    assert _sched_insts(mm.schedule) < mm.sim.steps // 4  # loops folded
+
+
+def test_loop_unroll_small_counts():
+    """A small LOOP unrolls fully; result and every leaf match."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    with a.loop(7):
+        a.add(2, 2, 5)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False, mode="superblock")
+    _assert_states_equal(ref, got, "unroll")
+    assert machine_mod.shared_as_u32(got)[0] == 7
+
+
+def test_loop_fori_large_counts():
+    """A large LOOP takes the ``fori_loop`` path: the folded schedule
+    stays tiny while the executed path is tens of thousands of steps."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    with a.loop(5000):
+        a.add(2, 2, 5)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    cp = compile_program(img, mode="superblock")
+    assert cp.sim.steps > 10_000
+    assert _trace_cost(cp.schedule) < 64          # body traced once
+    ref = run_program(img, tdx_dim=32)
+    got = cp.run(tdx_dim=32)
+    _assert_states_equal(ref, got, "fori")
+    assert machine_mod.shared_as_u32(got)[0] == 5000
+
+
+def test_nested_loops_fold_recursively():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    with a.loop(40):
+        with a.loop(25):
+            a.add(2, 2, 5)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    cp = compile_program(img, mode="superblock")
+    assert _sched_execd(cp.schedule) == cp.sim.steps
+    ref = run_program(img, tdx_dim=32)
+    _assert_states_equal(ref, cp.run(tdx_dim=32), "nested")
+    assert machine_mod.shared_as_u32(cp.run(tdx_dim=32))[0] == 1000
+
+
+def test_jsr_inside_loop_inside_predicate():
+    """JSR/RTS nested in a LOOP nested in IF/ELSE — the loop body spans
+    a call and returns, and still folds."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 8)
+    a.lodi(5, 1)
+    a.lodi(6, 0)
+    a.if_("lt", 1, 2, typ=Typ.U32)
+    with a.loop(3):
+        a.jsr("incr")
+    a.else_()
+    a.lodi(6, 99)
+    a.endif()
+    a.sto(6, 1, 0)
+    a.stop()
+    a.label("incr")
+    a.add(6, 6, 5)
+    a.rts()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False, mode="superblock")
+    _assert_states_equal(ref, got, "jsr-in-loop")
+    out = machine_mod.shared_as_u32(got)[:32]
+    assert np.array_equal(out, np.where(np.arange(32) < 8, 3, 99))
+
+
+def test_first_iteration_peels_on_mid_body_entry():
+    """A JMP into the middle of a loop body: the first (partial)
+    iteration fails the fold comparison and peels off inline; the
+    remaining full iterations still fold."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    a.lodi(6, 2)
+    a.init(4)
+    a.jmp("mid")
+    a.label("head")
+    a.add(2, 2, 6)
+    a.label("mid")
+    a.add(2, 2, 5)
+    a.loop_("head")
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32, schedule_nops=False)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False, mode="superblock")
+    _assert_states_equal(ref, got, "peel")
+    # 5 executions of "mid" (+1), 4 of "head" (+2)
+    assert machine_mod.shared_as_u32(got)[0] == 13
+
+
+def test_unbalanced_if_inside_loop_body():
+    """pdepth grows across iterations (IF with no ENDIF in the body) —
+    the superblock carries pdepth dynamically, so folding stays exact."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 8)
+    with a.loop(3):
+        a.emit(Op.IF_LT, ra=1, rb=2, typ=Typ.U32)
+        a.lodi(3, 7)
+    a.sto(3, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, tdx_dim=32)
+    got = run_compiled(img, tdx_dim=32, fallback=False, mode="superblock")
+    _assert_states_equal(ref, got, "unbalanced-if")
+
+
+def test_predicates_inside_fori_folded_loop():
+    """Balanced IF/ENDIF inside a loop large enough for the fori path."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 8)
+    a.lodi(4, 0)
+    a.lodi(5, 1)
+    with a.loop(300):
+        a.if_("lt", 1, 2, typ=Typ.U32)
+        a.add(4, 4, 5)
+        a.endif()
+    a.sto(4, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    cp = compile_program(img, mode="superblock")
+    assert _trace_cost(cp.schedule) < cp.sim.steps // 10
+    ref = run_program(img, tdx_dim=32)
+    _assert_states_equal(ref, cp.run(tdx_dim=32), "pred-fori")
+
+
+def test_trace_budget_falls_back_to_blocks():
+    """Over the trace budget, ``mode="auto"`` silently drops to the
+    basic-block driver and ``mode="superblock"`` raises — the
+    superblock → basic-block → interpreter chain."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    with a.loop(200):
+        a.add(2, 2, 5)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    old = blockc._MAX_TRACE
+    blockc._MAX_TRACE = 4            # schedule cannot fit
+    try:
+        cp = CompiledProgram(img, 32)
+        assert cp.mode == "blocks"
+        assert cp.switch_dispatches == cp.sim.dispatches > 0
+        with pytest.raises(BlockCompileError):
+            CompiledProgram(img, 32, mode="superblock")
+    finally:
+        blockc._MAX_TRACE = old
+    ref = run_program(img, tdx_dim=32)
+    _assert_states_equal(ref, cp.run(tdx_dim=32), "budget-fallback")
+
+
+def test_blocks_mode_still_available_and_identical():
+    """``mode="blocks"`` forces the basic-block driver; both compiled
+    tiers agree with the interpreter on every leaf."""
+    for b in _suite(CFG)[:3]:
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        got = run_compiled(b.image, shared_init=b.shared_init,
+                           tdx_dim=b.tdx_dim, fallback=False, mode="blocks")
+        _assert_states_equal(ref, got, f"blocks/{b.name}")
+        cp = compile_program(b.image, mode="blocks")
+        assert cp.mode == "blocks"
+
+
+def test_superblock_batched_lock_step():
+    """run_batch on the superblock tier: per-slot results equal per-job
+    interpreter runs (different data, same folded trace)."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.lodi(5, 0)
+    a.lodi(6, 1)
+    with a.loop(50):
+        a.add(5, 5, 6)
+        a.fadd(2, 2, 2)
+    a.sto(2, 1, 0)
+    a.sto(5, 1, 32)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    cp = compile_program(img, mode="superblock")
+    rng = np.random.default_rng(11)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(4)]
+    out = cp.run_batch(datas, [32] * 4)
+    for i, d in enumerate(datas):
+        ref = run_program(img, shared_init=d, tdx_dim=32)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              np.asarray(out.shared)[i]), i
+        assert int(out.cycles[i]) == int(ref.cycles)
+        assert int(out.steps[i]) == int(ref.steps)
+
+
+def test_fleet_superblock_tier_counters():
+    """Same-program groups land on the superblock tier and the stats
+    split (superblock vs blocks-only) is reported."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.lodi(6, 1)
+    with a.loop(20):
+        a.fadd(2, 2, 2)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    rng = np.random.default_rng(3)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(6)]
+    fleet = Fleet(CFG, batch_size=4)
+    hs = [fleet.submit(img, d, tdx_dim=32) for d in datas]
+    results = fleet.drain()
+    assert fleet.stats.compiled_jobs == 6
+    assert fleet.stats.superblock_jobs == 6
+    assert fleet.stats.superblock_batches == fleet.stats.compiled_batches == 2
+    for d, h in zip(datas, hs):
+        ref = run_program(img, shared_init=d, tdx_dim=32)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
+
+
+def test_validate_false_matches_fast_interpreter():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lodi(2, 0)
+    a.lodi(5, 1)
+    with a.loop(100):
+        a.add(2, 2, 5)
+    a.sto(2, 1, 0)
+    a.stop()
+    img = a.assemble(threads_active=32)
+    ref = run_program(img, validate=False, tdx_dim=32)
+    got = run_compiled(img, validate=False, tdx_dim=32, fallback=False,
+                       mode="superblock")
+    _assert_states_equal(ref, got, "validate=False")
