@@ -1,0 +1,146 @@
+"""Benchmark-trend gate: fail CI when aggregate speedups regress.
+
+Compares freshly measured ``BENCH_*.json`` files against the committed
+baselines and exits 1 when any tracked metric regresses by more than
+``--max-regress`` (default 20%).  Only *ratio* metrics (speedups,
+residency gain, auto-tier efficiency) are compared — absolute wall
+times depend on the runner hardware and would make the gate flap, but
+a speedup of tier A over tier B on the same box is hardware-portable.
+
+Usage (the ``bench-trend`` CI job)::
+
+    # stash the committed baselines before the benchmarks overwrite them
+    mkdir -p .bench-baseline && cp BENCH_*.json .bench-baseline/
+    python -m benchmarks.compiled && python -m benchmarks.superblock \
+        && python -m benchmarks.fleet
+    python -m benchmarks.check_trend --baseline .bench-baseline --current .
+
+A metric present in the baseline but missing from the fresh run also
+fails the gate: a silently vanished metric is how a perf regression
+hides from a trend line.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _compiled_metrics(data: dict) -> dict[str, float]:
+    """Ratio metrics from ``BENCH_compiled.json``."""
+    m: dict[str, float] = {}
+    for row in data.get("single_core", []):
+        if row.get("name") == "aggregate":
+            m["compiled/single_core_aggregate_speedup"] = row["speedup"]
+    for row in data.get("fleet", []):
+        m[f"compiled/fleet_{row['mix']}_speedup"] = row["speedup"]
+    superblock = data.get("superblock", {})
+    for row in superblock.get("single_core", []):
+        if row.get("name") == "aggregate":
+            m["superblock/aggregate_vs_blocks"] = row["speedup_vs_blocks"]
+            m["superblock/aggregate_vs_interp"] = row["speedup_vs_interp"]
+    auto_tier = data.get("auto_tier", {})
+    sweep = auto_tier.get("sweep", [])
+    # min over the sweep of faster_tier_time / chosen_tier_time: 1.0
+    # means the auto tier always picked the faster tier.  Points where
+    # the two tiers measured within the benchmark's noise floor are
+    # excluded — they flip run to run and would make the trend flap.
+    floor = auto_tier.get("noise_floor_us", 0.0)
+    vals = [
+        1.0 / row["auto_vs_faster"]
+        for row in sweep
+        if row.get("tier_gap_us", float("inf")) > floor
+    ]
+    if vals:
+        m["auto_tier/worst_efficiency"] = round(min(vals), 3)
+    return m
+
+
+def _fleet_metrics(rows: list) -> dict[str, float]:
+    """Ratio metrics from ``BENCH_fleet.json`` (a list of mix rows)."""
+    m: dict[str, float] = {}
+    for row in rows:
+        if "residency_speedup" in row:
+            m["fleet/residency_speedup"] = row["residency_speedup"]
+        elif "speedup" in row:
+            m[f"fleet/vmapped_{row['mix']}_speedup"] = row["speedup"]
+    return m
+
+
+_EXTRACTORS = {
+    "BENCH_compiled.json": _compiled_metrics,
+    "BENCH_fleet.json": _fleet_metrics,
+}
+
+
+def load_metrics(root: str) -> dict[str, float]:
+    metrics: dict[str, float] = {}
+    for fname, extract in _EXTRACTORS.items():
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            metrics.update(extract(json.load(f)))
+    return metrics
+
+
+def compare(
+    baseline: dict[str, float],
+    current: dict[str, float],
+    max_regress: float,
+) -> list[str]:
+    """Return human-readable failure lines (empty == gate passes)."""
+    failures = []
+    for name in sorted(baseline):
+        base = baseline[name]
+        if name not in current:
+            failures.append(f"{name}: present in baseline ({base}) but "
+                            f"missing from the current run")
+            continue
+        cur = current[name]
+        ratio = cur / base if base else float("inf")
+        status = "OK"
+        if ratio < 1.0 - max_regress:
+            status = "REGRESSED"
+            failures.append(
+                f"{name}: {base} -> {cur} "
+                f"({(1.0 - ratio) * 100:.1f}% worse, limit "
+                f"{max_regress * 100:.0f}%)"
+            )
+        print(f"{status:>9}  {name}: baseline={base} current={cur} "
+              f"(x{ratio:.2f})")
+    for name in sorted(set(current) - set(baseline)):
+        print(f"      NEW  {name}: {current[name]}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the freshly measured ones")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional drop per metric (0.20 = 20%%)")
+    args = ap.parse_args()
+
+    baseline = load_metrics(args.baseline)
+    current = load_metrics(args.current)
+    if not baseline:
+        print(f"# no baseline metrics under {args.baseline}; nothing to "
+              f"compare", file=sys.stderr)
+        sys.exit(2)
+    failures = compare(baseline, current, args.max_regress)
+    if failures:
+        print(f"# TREND FAIL ({len(failures)} metric(s)):", file=sys.stderr)
+        for line in failures:
+            print(f"#   {line}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# trend gate passed: {len(baseline)} metric(s) within "
+          f"{args.max_regress * 100:.0f}%", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

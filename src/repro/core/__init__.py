@@ -7,8 +7,8 @@ from .assembler import Asm, ProgramImage, schedule
 from .machine import (MachineState, init_state, shared_as_f32, shared_as_u32,
                       shared_as_i32, profile)
 from .executor import make_step, pad_image, run_program
-from .blockc import (BlockCompileError, CompiledProgram, compile_program,
-                     run_compiled)
+from .blockc import (DEFAULT_TIER_POLICY, BlockCompileError, CompiledProgram,
+                     TierPolicy, compile_program, run_compiled)
 from .area_model import resources, Resources
 from . import cost, area_model, semantics
 
@@ -20,5 +20,6 @@ __all__ = [
     "init_state", "shared_as_f32", "shared_as_u32", "shared_as_i32",
     "profile", "run_program", "make_step", "pad_image", "resources",
     "Resources", "cost", "area_model", "semantics", "BlockCompileError",
-    "CompiledProgram", "compile_program", "run_compiled",
+    "CompiledProgram", "compile_program", "run_compiled", "TierPolicy",
+    "DEFAULT_TIER_POLICY",
 ]

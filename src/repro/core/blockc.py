@@ -58,6 +58,24 @@ registers, shared memory, cycles, steps, PC, stats, hazard rows and
 violation count — which the equivalence suites (``tests/test_blockc.py``,
 ``tests/test_superblock.py``) pin across the program suite and
 configuration space.
+
+**Tier selection is a static cost decision** (:class:`TierPolicy`): the
+same way the paper fixes the pipeline structure from the statically
+known fabric, ``mode="auto"`` picks between the basic-block driver and
+the superblock runner from the already-computed path simulation —
+dispatch counts, executed instructions, the repeat-node trip
+distribution and the trace cost — instead of a binary eligibility
+check.  The calibration behind the default thresholds lives in
+``benchmarks/superblock.py`` (the ``auto_tier`` crossover sweep), and
+every threshold is overridable per policy instance.
+
+Callers that only read shared memory and the cycle count (the fleet
+scheduler, throughput benchmarks) use the **light path**
+(:meth:`CompiledProgram.run_light` / ``run_batch_light`` /
+``run_light_dev``): only ``(shared, cycles, halted)`` leave the device,
+nothing is donated (so device-resident inputs can be replayed across
+drains), and the 18-leaf :class:`MachineState` assembly is skipped
+entirely.
 """
 from __future__ import annotations
 
@@ -222,6 +240,192 @@ def _trace_cost(items) -> int:
             ex = it[2] * _sched_execd(it[1])
             c += ex if ex <= _UNROLL_FULL else _trace_cost(it[1])
     return c
+
+
+class _PlanStats(NamedTuple):
+    """What the superblock runner would actually do with a schedule,
+    mirroring its unroll policy exactly (see ``_apply_schedule``)."""
+
+    trace_cost: int             # instructions traced (== _trace_cost)
+    fori_reps: int              # repeat nodes run as ``lax.fori_loop``
+    unrolled_reps: int          # repeat nodes inlined into the trace
+    fori_trips: tuple           # trip counts of the fori repeats
+    fori_execd: int             # instructions executed inside fori reps
+
+
+def _plan_stats(items) -> _PlanStats:
+    trace = fori = unrolled = fori_execd = 0
+    trips: list[int] = []
+    for it in items:
+        if isinstance(it, (int, np.integer)):
+            trace += 1
+            continue
+        _, body, count = it
+        ex = count * _sched_execd(body)
+        if ex <= _UNROLL_FULL:
+            # the whole subtree inlines: nested repeats unroll with it
+            trace += ex
+            unrolled += 1 + _count_reps(body)
+        else:
+            sub = _plan_stats(body)
+            trace += sub.trace_cost
+            fori += 1 + sub.fori_reps
+            unrolled += sub.unrolled_reps
+            trips.append(count)
+            trips.extend(sub.fori_trips)
+            fori_execd += ex
+    return _PlanStats(trace_cost=trace, fori_reps=fori,
+                      unrolled_reps=unrolled, fori_trips=tuple(trips),
+                      fori_execd=fori_execd)
+
+
+def _count_reps(items) -> int:
+    n = 0
+    for it in items:
+        if not isinstance(it, (int, np.integer)):
+            n += 1 + _count_reps(it[1])
+    return n
+
+
+#: default :class:`TierPolicy` threshold table.  Calibrated on the CPU
+#: backend by the ``auto_tier`` crossover sweep in
+#: ``benchmarks/superblock.py`` (loop_saxpy back-edge counts 8 -> 2048,
+#: interleaved best-of timing through the light path, which is what the
+#: fleet scheduler and the throughput benchmarks actually run): the
+#: basic-block driver's cost grows ~linearly with its ``lax.switch``
+#: dispatch count while the superblock runner stays nearly flat, and
+#: the superblock's fixed per-call cost — mostly the 18-leaf
+#: ``MachineState`` assembly on the full path — shrinks enough on the
+#: light path that the measured crossover sits between 16 and 32
+#: back-edges.  Batched lock-step runs tilt further: the block driver's
+#: per-dispatch carried-state copies scale with the batch width, and at
+#: batch >= 4 the superblock tier measured faster (or equal) on every
+#: swept program, so wide batches always take an eligible superblock.
+_TIER_DEFAULTS: dict[str, int | None] = {
+    # hard eligibility bound on the traced-instruction budget
+    # (None -> the module-wide ``_MAX_TRACE``)
+    "max_trace_cost": None,
+    # batches at least this wide always take an eligible superblock
+    "batch_superblock_min": 4,
+    # single-core: a plan must save at least this many block-driver
+    # switch dispatches to amortize the superblock's fixed overhead
+    "min_backedge_dispatches": 24,
+    # single-core: a plan tracing at least this many instructions wins
+    # on cross-block fusion even with few dispatches (bitonic/FFT-like
+    # straight-line-heavy programs); below it, short fully-unrolled
+    # traces stay on the (cheaper-to-launch) block driver
+    "min_trace_fusion": 256,
+    # single-core: a plan executing at least this many instructions
+    # inside fori repeats amortizes the fixed overhead through the fused
+    # loop body regardless of the dispatch count
+    "min_fori_execd": 8192,
+}
+
+
+class TierPolicy:
+    """The static cost model behind ``mode="auto"`` tier selection.
+
+    Decides basic-block driver vs superblock runner from the host-side
+    path simulation alone (:class:`_SimResult`) — no measurement, no
+    dynamic feedback — the way the paper fixes processor structure from
+    the statically-known resource mix.  The decision procedure, first
+    match wins:
+
+    1. no folded schedule, or its trace cost over ``max_trace_cost``
+       -> **blocks** (ineligible);
+    2. ``batch >= batch_superblock_min`` -> **superblock** (the block
+       driver's per-dispatch carried-state copies scale with the batch
+       width; measured at batch 32 the superblock tier is faster on
+       every swept program);
+    3. ``dispatches >= min_backedge_dispatches`` -> **superblock** (the
+       dispatch savings amortize the fixed overhead);
+    4. ``trace_cost >= min_trace_fusion`` -> **superblock** (cross-block
+       fusion of a long trace — whether straight-line or unrolled);
+    5. instructions executed inside ``fori``-run repeats
+       ``>= min_fori_execd`` -> **superblock**;
+    6. otherwise -> **blocks** (small paths — few dispatches, short
+       trace: the superblock's fixed per-call cost eats the dispatch
+       win).
+
+    Thresholds are overridable per instance (``TierPolicy(
+    min_backedge_dispatches=64)``); instances are immutable, hashable
+    and usable as compile-cache key components.
+    """
+
+    def __init__(self, **overrides: int | None):
+        unknown = set(overrides) - set(_TIER_DEFAULTS)
+        if unknown:
+            raise ValueError(
+                f"unknown TierPolicy thresholds {sorted(unknown)}; "
+                f"known: {sorted(_TIER_DEFAULTS)}")
+        table = dict(_TIER_DEFAULTS)
+        table.update(overrides)
+        self._table = table
+        self._key = tuple(sorted(table.items()))
+
+    @property
+    def table(self) -> dict[str, int | None]:
+        """A copy of the threshold table (the instance stays immutable)."""
+        return dict(self._table)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, TierPolicy) and self._key == other._key
+
+    def __hash__(self) -> int:
+        return hash(self._key)
+
+    def __repr__(self) -> str:
+        diff = {k: v for k, v in self._table.items()
+                if v != _TIER_DEFAULTS[k]}
+        return f"TierPolicy({', '.join(f'{k}={v}' for k, v in diff.items())})"
+
+    # ------------------------------------------------------------ model
+    def batch_class(self, batch: int) -> int:
+        """Collapse a batch-size hint to the classes the decision can
+        distinguish (keeps compile-cache keys from fragmenting across
+        every batch shape)."""
+        wide = self._table["batch_superblock_min"]
+        return wide if batch >= wide else 1
+
+    def features(self, sim: _SimResult) -> dict:
+        """The decision's inputs, extracted from one path simulation."""
+        cap = self._table["max_trace_cost"]
+        cap = _MAX_TRACE if cap is None else cap
+        base = {"dispatches": sim.dispatches, "execd": sim.steps}
+        if sim.schedule is None:
+            return {**base, "eligible": False, "trace_cost": None,
+                    "fori_reps": 0, "unrolled_reps": 0,
+                    "fori_trips": (), "fori_execd": 0}
+        ps = _plan_stats(sim.schedule)
+        return {**base, "eligible": ps.trace_cost <= cap,
+                "trace_cost": ps.trace_cost, "fori_reps": ps.fori_reps,
+                "unrolled_reps": ps.unrolled_reps,
+                "fori_trips": ps.fori_trips, "fori_execd": ps.fori_execd}
+
+    def choose(self, sim: _SimResult, batch: int = 1, *,
+               features: dict | None = None) -> str:
+        """``"superblock"`` or ``"blocks"`` for this path at this batch
+        width — the cheaper tier under the calibrated cost model.
+        ``features`` accepts a precomputed :meth:`features` result so a
+        caller that already extracted them doesn't pay the schedule
+        walk twice."""
+        f = self.features(sim) if features is None else features
+        if not f["eligible"]:
+            return "blocks"
+        t = self._table
+        if batch >= t["batch_superblock_min"]:
+            return "superblock"
+        if f["dispatches"] >= t["min_backedge_dispatches"]:
+            return "superblock"
+        if f["trace_cost"] >= t["min_trace_fusion"]:
+            return "superblock"
+        if f["fori_execd"] >= t["min_fori_execd"]:
+            return "superblock"
+        return "blocks"
+
+
+#: the policy ``mode="auto"`` uses unless a caller overrides it
+DEFAULT_TIER_POLICY = TierPolicy()
 
 
 class _PathRecorder:
@@ -483,18 +687,21 @@ class CompiledProgram:
     baked hazard results) assume execution starts at PC 0 with empty
     stacks and zeroed registers, exactly like :func:`init_state`.
 
-    ``mode`` selects the tier: ``"auto"`` (default) uses the superblock
-    runner whenever the folded path fits the trace budget and falls back
-    to the basic-block driver otherwise; ``"superblock"`` requires it
-    (raising :class:`BlockCompileError` when ineligible); ``"blocks"``
-    forces the basic-block driver.  The tier actually chosen is exposed
-    as ``self.mode``, and ``self.switch_dispatches`` counts the
-    block-driver ``lax.switch`` dispatches the program pays on this tier
-    (0 on the superblock tier — that is the point).
+    ``mode`` selects the tier: ``"auto"`` (default) asks the
+    :class:`TierPolicy` cost model to pick the cheaper tier for this
+    path at this batch width (``batch_hint``); ``"superblock"`` requires
+    the superblock runner (raising :class:`BlockCompileError` when the
+    folded path is over the trace budget); ``"blocks"`` forces the
+    basic-block driver.  The tier actually chosen is exposed as
+    ``self.mode`` (the policy's inputs as ``self.tier_features``), and
+    ``self.switch_dispatches`` counts the block-driver ``lax.switch``
+    dispatches the program pays on this tier (0 on the superblock tier —
+    that is the point).
     """
 
     def __init__(self, image: ProgramImage, threads: int, *,
-                 validate: bool = True, mode: str = "auto"):
+                 validate: bool = True, mode: str = "auto",
+                 policy: TierPolicy | None = None, batch_hint: int = 1):
         cfg = image.cfg
         if mode not in ("auto", "superblock", "blocks"):
             raise ValueError(f"unknown compile mode {mode!r}")
@@ -527,20 +734,32 @@ class CompiledProgram:
         self._tid = np.arange(cfg.max_threads, dtype=np.int32)
         self._tid0 = self._tid == 0
         self.schedule = self.sim.schedule
-        eligible = (self.schedule is not None
-                    and _trace_cost(self.schedule) <= _MAX_TRACE)
+        self.policy = DEFAULT_TIER_POLICY if policy is None else policy
+        self.batch_hint = batch_hint
+        self.tier_features = self.policy.features(self.sim)
+        eligible = self.tier_features["eligible"]
         if mode == "superblock" and not eligible:
+            cap = self.policy.table["max_trace_cost"]
+            cap = _MAX_TRACE if cap is None else cap
+            cost = self.tier_features["trace_cost"]
             raise BlockCompileError(
-                "program is not superblock-eligible (folded path "
-                f"exceeds the {_MAX_TRACE}-instruction trace budget)")
-        self.mode = "superblock" if eligible and mode != "blocks" \
-            else "blocks"
+                "program is not superblock-eligible ("
+                + ("the path did not fold to a schedule"
+                   if cost is None else
+                   f"trace cost {cost} exceeds the {cap}-instruction "
+                   f"budget") + ")")
+        if mode == "auto":
+            self.mode = self.policy.choose(
+                self.sim, batch=batch_hint, features=self.tier_features)
+        else:
+            self.mode = mode
         if self.mode == "superblock":
             self.switch_dispatches = 0
             self._run_jit = self._build_super_runner()
         else:
             self.switch_dispatches = self.sim.dispatches
             self._run_jit = self._build_runner()
+        self._light_jit = None           # built lazily on first use
 
     # ----------------------------------------------------- shared data op
     def _apply_row(self, row, regs, shared, pstack, pdepth, pok, tdx_dim):
@@ -695,26 +914,62 @@ class CompiledProgram:
         return fn
 
     # --------------------------------------------------------- superblock
-    def _build_super_runner(self):
-        """The superblock driver: the folded static path, traced as one
-        computation with no ``while_loop`` and no ``switch``.
+    def _apply_schedule(self, items, state, tdx_dim):
+        """Trace a schedule over the dynamic state — the superblock
+        runner's core, shared by the full and light runners.
 
         Straight-line schedule items trace inline; a repeat node either
         unrolls fully (small executed size — maximal fusion across the
         back-edge) or becomes a ``lax.fori_loop`` whose body is the loop
-        trace fused once.  Every data-independent leaf of the final
-        :class:`MachineState` (PC, cycles, steps, loop/call stacks,
-        stats, hazards) is baked from the host-side simulation; only
-        registers, shared memory and the predicate state flow through
-        the trace.  ``pdepth`` is data-independent too but rides along
-        dynamically so unbalanced IF/ENDIF inside a folded loop body
-        stays exact across iterations.
+        trace fused once (the unroll policy ``_plan_stats`` mirrors).
         """
+        regs, shared, pstack, pdepth = state
+        pok = None
+        for it in items:
+            if isinstance(it, (int, np.integer)):
+                row = tuple(int(v) for v in self.packed[it])
+                regs, shared, pstack, pdepth, pok = self._apply_row(
+                    row, regs, shared, pstack, pdepth, pok, tdx_dim)
+                continue
+            _, body, count = it
+            st = (regs, shared, pstack, pdepth)
+            if count * _sched_execd(body) <= _UNROLL_FULL:
+                for _ in range(count):
+                    st = self._apply_schedule(body, st, tdx_dim)
+            else:
+                st = lax.fori_loop(
+                    0, count,
+                    lambda _, s, _b=body: self._apply_schedule(
+                        _b, s, tdx_dim), st)
+            regs, shared, pstack, pdepth = st
+            pok = None                 # pstack/pdepth may have moved
+        return regs, shared, pstack, pdepth
+
+    def _super_final(self, shared, tdx_dim):
+        """Traced: fresh state -> final dynamic leaves, per the folded
+        static path."""
         cfg = self.cfg
         T, R = cfg.max_threads, cfg.regs_per_thread
         D = max(1, cfg.predicate_levels)
+        batch = shared.shape[:-1]              # () or (B,)
+        return self._apply_schedule(self.schedule, (
+            jnp.zeros(batch + (T, R), jnp.uint32), shared,
+            jnp.zeros(batch + (T, D), jnp.bool_),
+            jnp.zeros((T,), _I32)), tdx_dim)
+
+    def _build_super_runner(self):
+        """The superblock driver: the folded static path, traced as one
+        computation with no ``while_loop`` and no ``switch``.
+
+        Every data-independent leaf of the final :class:`MachineState`
+        (PC, cycles, steps, loop/call stacks, stats, hazards) is baked
+        from the host-side simulation; only registers, shared memory and
+        the predicate state flow through the trace.  ``pdepth`` is
+        data-independent too but rides along dynamically so unbalanced
+        IF/ENDIF inside a folded loop body stays exact across
+        iterations.
+        """
         sim = self.sim
-        schedule = self.schedule
         threads = self.threads
         zeros = np.zeros((isa.NUM_OP_CLASSES,), np.int32)
         stat_c = sim.stat_cycles if self.validate else zeros
@@ -723,34 +978,8 @@ class CompiledProgram:
         @functools.partial(jax.jit, donate_argnums=(0,))
         def run(shared, tdx_dim):
             batch = shared.shape[:-1]          # () or (B,)
-
-            def apply_items(items, state):
-                regs, shared, pstack, pdepth = state
-                pok = None
-                for it in items:
-                    if isinstance(it, (int, np.integer)):
-                        row = tuple(int(v) for v in self.packed[it])
-                        regs, shared, pstack, pdepth, pok = \
-                            self._apply_row(row, regs, shared, pstack,
-                                            pdepth, pok, tdx_dim)
-                        continue
-                    _, body, count = it
-                    st = (regs, shared, pstack, pdepth)
-                    if count * _sched_execd(body) <= _UNROLL_FULL:
-                        for _ in range(count):
-                            st = apply_items(body, st)
-                    else:
-                        st = lax.fori_loop(
-                            0, count,
-                            lambda _, s, _b=body: apply_items(_b, s), st)
-                    regs, shared, pstack, pdepth = st
-                    pok = None             # pstack/pdepth may have moved
-                return regs, shared, pstack, pdepth
-
-            regs, shared_f, pstack, pdepth = apply_items(schedule, (
-                jnp.zeros(batch + (T, R), jnp.uint32), shared,
-                jnp.zeros(batch + (T, D), jnp.bool_),
-                jnp.zeros((T,), _I32)))
+            regs, shared_f, pstack, pdepth = self._super_final(
+                shared, tdx_dim)
 
             def b(x):   # broadcast a baked leaf over the batch axis
                 x = jnp.asarray(x)
@@ -774,7 +1003,10 @@ class CompiledProgram:
         return run
 
     # ------------------------------------------------------------- driver
-    def _build_runner(self):
+    def _blocks_final(self, shared, tdx_dim):
+        """Traced: fresh state -> final ``(_Data, _Seq)`` through the
+        ``while_loop`` + ``switch`` block driver — shared by the full
+        and light runners."""
         fns = [self._block_fn(s, e) for s, e in self.blocks]
         fns.append(self._pad_stop_fn())
         pc2block = jnp.asarray(self._pc2block)
@@ -783,9 +1015,6 @@ class CompiledProgram:
         D = max(1, cfg.predicate_levels)
         max_steps = cfg.max_steps
         prog_len = self.prog_len
-        hazard = self.sim.hazard
-        violations = self.sim.violations
-        threads = self.threads
 
         def cond(carry):
             _, seq = carry
@@ -796,6 +1025,26 @@ class CompiledProgram:
             data, seq = carry
             return lax.switch(pc2block[seq.pc], fns, data, seq)
 
+        batch = shared.shape[:-1]              # () or (B,)
+        z = jnp.int32(0)
+        data = _Data(
+            regs=jnp.zeros(batch + (T, R), jnp.uint32), shared=shared,
+            pstack=jnp.zeros(batch + (T, D), jnp.bool_),
+            tdx_dim=tdx_dim)
+        seq = _Seq(
+            pc=z, cycles=z, steps=z, halted=jnp.bool_(False),
+            pdepth=jnp.zeros((T,), _I32),
+            lctr=jnp.zeros((cfg.max_loop_depth,), _I32), lsp=z,
+            cstack=jnp.zeros((cfg.max_call_depth,), _I32), csp=z,
+            stat_cycles=jnp.zeros((isa.NUM_OP_CLASSES,), _I32),
+            stat_instrs=jnp.zeros((isa.NUM_OP_CLASSES,), _I32))
+        return lax.while_loop(cond, body, (data, seq))
+
+    def _build_runner(self):
+        hazard = self.sim.hazard
+        violations = self.sim.violations
+        threads = self.threads
+
         # One dispatch per run: the fresh registers/predicate stacks and
         # the fresh sequencer state are constants inside the jit, and the
         # final MachineState (including the statically baked hazard rows)
@@ -803,19 +1052,7 @@ class CompiledProgram:
         @functools.partial(jax.jit, donate_argnums=(0,))
         def run(shared, tdx_dim):
             batch = shared.shape[:-1]          # () or (B,)
-            z = jnp.int32(0)
-            data = _Data(
-                regs=jnp.zeros(batch + (T, R), jnp.uint32), shared=shared,
-                pstack=jnp.zeros(batch + (T, D), jnp.bool_),
-                tdx_dim=tdx_dim)
-            seq = _Seq(
-                pc=z, cycles=z, steps=z, halted=jnp.bool_(False),
-                pdepth=jnp.zeros((T,), _I32),
-                lctr=jnp.zeros((cfg.max_loop_depth,), _I32), lsp=z,
-                cstack=jnp.zeros((cfg.max_call_depth,), _I32), csp=z,
-                stat_cycles=jnp.zeros((isa.NUM_OP_CLASSES,), _I32),
-                stat_instrs=jnp.zeros((isa.NUM_OP_CLASSES,), _I32))
-            d, s = lax.while_loop(cond, body, (data, seq))
+            d, s = self._blocks_final(shared, tdx_dim)
 
             def b(x):   # broadcast a seq leaf over the batch axis
                 x = jnp.asarray(x)
@@ -832,6 +1069,34 @@ class CompiledProgram:
                 hazard=b(jnp.asarray(hazard)),
                 hazard_violations=b(jnp.int32(violations)))
 
+        return run
+
+    def _build_light_runner(self):
+        """The light path: only ``(shared, cycles, halted)`` leave the
+        device.  No input donation — the fleet's residency cache replays
+        the same device-resident shared image across drains, which a
+        donated (consumed) buffer would forbid.  On the superblock tier
+        cycles/halted are baked constants; on the blocks tier they fall
+        out of the driver loop."""
+        sim = self.sim
+
+        if self.mode == "superblock":
+            @jax.jit
+            def run(shared, tdx_dim):
+                batch = shared.shape[:-1]
+                _, shared_f, _, _ = self._super_final(shared, tdx_dim)
+                return (shared_f,
+                        jnp.broadcast_to(jnp.int32(sim.cycles), batch),
+                        jnp.broadcast_to(jnp.bool_(sim.halted), batch))
+            return run
+
+        @jax.jit
+        def run(shared, tdx_dim):
+            batch = shared.shape[:-1]
+            d, s = self._blocks_final(shared, tdx_dim)
+            return (d.shared,
+                    jnp.broadcast_to(s.cycles, batch),
+                    jnp.broadcast_to(s.halted, batch))
         return run
 
     # ------------------------------------------------------------- public
@@ -860,6 +1125,49 @@ class CompiledProgram:
         out = self._run_jit(jnp.asarray(shared),
                             jnp.asarray(tdx_dims, _I32))
         out.cycles.block_until_ready()
+        return out
+
+    # -------------------------------------------------------- light path
+    def run_light_dev(self, shared, tdx_dim):
+        """Raw light entry: device (or host) arrays in — ``(..., S)``
+        uint32 shared image, ``(...,)``/scalar int32 TDX — device arrays
+        ``(shared, cycles, halted)`` out.  No host sync, no donation:
+        the same input buffer can be replayed across calls, which is
+        what keeps the fleet's residency cache sound."""
+        if self._light_jit is None:
+            self._light_jit = self._build_light_runner()
+        return self._light_jit(shared, tdx_dim)
+
+    def run_light(self, *, shared_init=None, tdx_dim: int = 16):
+        """Execute one core, returning only ``(shared, cycles, halted)``
+        — for callers that never read registers, stacks or stats.  The
+        leaves are bit-identical to the same-named :meth:`run` leaves;
+        the other 15 ``MachineState`` leaves are never assembled or
+        transferred."""
+        S = self.cfg.shared_words
+        shared = np.zeros((S,), np.uint32)
+        if shared_init is not None:
+            buf = machine_mod.pack_shared_init(shared_init, S)
+            shared[:buf.size] = buf
+        sh, cyc, halted = self.run_light_dev(jnp.asarray(shared),
+                                             jnp.int32(tdx_dim))
+        sh.block_until_ready()
+        return sh, int(cyc), bool(halted)
+
+    def run_batch_light(self, shared_inits: list, tdx_dims):
+        """Batched light path: N same-program cores in lock-step,
+        returning ``(shared (N, S), cycles (N,), halted (N,))`` only."""
+        S = self.cfg.shared_words
+        n = len(shared_inits)
+        shared = np.zeros((n, S), np.uint32)
+        for i, s0 in enumerate(shared_inits):
+            if s0 is None:
+                continue
+            buf = machine_mod.pack_shared_init(s0, S)
+            shared[i, :buf.size] = buf
+        out = self.run_light_dev(jnp.asarray(shared),
+                                 jnp.asarray(tdx_dims, _I32))
+        out[0].block_until_ready()
         return out
 
 
@@ -894,33 +1202,41 @@ def normalize_threads(image: ProgramImage, threads: int | None) -> int:
 
 
 def compile_program(image: ProgramImage, threads: int | None = None, *,
-                    validate: bool = True,
-                    mode: str = "auto") -> CompiledProgram:
+                    validate: bool = True, mode: str = "auto",
+                    policy: TierPolicy | None = None,
+                    batch_hint: int = 1) -> CompiledProgram:
     """Compile ``image`` for a static runtime thread count (default: the
     count it was assembled for).  Compiles are cached on (config,
-    program bytes, threads, validate, mode) with LRU eviction — hits
-    move to the back of the queue, so a hot program is never evicted to
-    keep a cold (or negative-cached) one.  Rejections are cached too, so
-    a non-halting program pays its (up to ``max_steps``-long) host-side
-    path walk once, not on every fleet drain.
+    program bytes, threads, validate, mode, policy, batch class) with
+    LRU eviction — hits move to the back of the queue, so a hot program
+    is never evicted to keep a cold (or negative-cached) one.
+    Rejections are cached too, so a non-halting program pays its (up to
+    ``max_steps``-long) host-side path walk once, not on every fleet
+    drain.
 
-    ``mode``: ``"auto"`` picks the superblock tier when the folded path
-    fits the trace budget, else the basic-block driver; ``"superblock"``
-    and ``"blocks"`` force a tier (the former raising
-    :class:`BlockCompileError` when ineligible).
+    ``mode``: ``"auto"`` asks the :class:`TierPolicy` cost model
+    (``policy``, default :data:`DEFAULT_TIER_POLICY`) to pick the
+    cheaper tier for this path at ``batch_hint`` lock-step cores;
+    ``"superblock"`` and ``"blocks"`` force a tier (the former raising
+    :class:`BlockCompileError` when ineligible).  ``batch_hint`` is
+    collapsed to the policy's batch classes before keying the cache, so
+    fleet drains at different batch sizes share compiles.
 
     Raises :class:`BlockCompileError` for programs whose static path does
     not halt within ``cfg.max_steps``.
     """
     threads = normalize_threads(image, threads)
-    key = (image.cfg, program_key(image), threads, validate, mode)
+    pol = DEFAULT_TIER_POLICY if policy is None else policy
+    hint = pol.batch_class(batch_hint) if mode == "auto" else 1
+    key = (image.cfg, program_key(image), threads, validate, mode, pol,
+           hint)
     hit = _CACHE.pop(key, None)          # pop + reinsert = move-to-end
     if hit is None:
         while len(_CACHE) >= _CACHE_MAX:
             _CACHE.pop(next(iter(_CACHE)))     # oldest entry first (LRU)
         try:
             hit = CompiledProgram(image, threads, validate=validate,
-                                  mode=mode)
+                                  mode=mode, policy=pol, batch_hint=hint)
         except BlockCompileError as e:
             hit = e                      # negative-cache the rejection
     _CACHE[key] = hit
@@ -931,7 +1247,8 @@ def compile_program(image: ProgramImage, threads: int | None = None, *,
 
 def run_compiled(image: ProgramImage, *, threads: int | None = None,
                  tdx_dim: int = 16, shared_init=None, validate: bool = True,
-                 fallback: bool = True, mode: str = "auto") -> MachineState:
+                 fallback: bool = True, mode: str = "auto",
+                 policy: TierPolicy | None = None) -> MachineState:
     """Execute an assembled program through the block compiler.
 
     Drop-in for ``run_program(image, threads=..., tdx_dim=...,
@@ -943,7 +1260,8 @@ def run_compiled(image: ProgramImage, *, threads: int | None = None,
     """
     threads = normalize_threads(image, threads)
     try:
-        cp = compile_program(image, threads, validate=validate, mode=mode)
+        cp = compile_program(image, threads, validate=validate, mode=mode,
+                             policy=policy)
     except BlockCompileError:
         if not fallback:
             raise

@@ -18,10 +18,11 @@ cores) and what throughput studies against IP cores need.
     results[h].shared_f32()
 """
 from .api import Fleet, run_jobs
-from .engine import fleet_run, stack_states, unstack_state
+from .engine import ResidencyCache, fleet_run, stack_states, unstack_state
 from .scheduler import FleetJob, FleetScheduler, FleetStats, JobResult
 
 __all__ = [
     "Fleet", "run_jobs", "fleet_run", "stack_states", "unstack_state",
     "FleetJob", "FleetScheduler", "FleetStats", "JobResult",
+    "ResidencyCache",
 ]

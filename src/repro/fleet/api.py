@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Any
 
 from ..core.assembler import ProgramImage
+from ..core.blockc import TierPolicy
 from ..core.config import EGPUConfig
 from .scheduler import FleetScheduler, FleetStats, JobResult
 
@@ -21,20 +22,31 @@ from .scheduler import FleetScheduler, FleetStats, JobResult
 class Fleet:
     """A homogeneous array of eGPU cores behind a job queue.
 
-    Same-program jobs are automatically grouped onto the block-compiled
-    lock-step tier (same blocks, different data); mixed batches fall back
-    to the vmapped interpreter.  ``use_compiler=False`` forces the
-    interpreter for everything (results are bit-identical either way).
+    Same-program jobs are automatically grouped onto the compiled
+    lock-step tiers (same blocks, different data), with the
+    :class:`~repro.core.blockc.TierPolicy` cost model choosing between
+    the basic-block driver and the superblock runner per (program,
+    batch width); mixed batches fall back to the vmapped interpreter.
+    ``use_compiler=False`` forces the interpreter for everything
+    (results are bit-identical either way), and ``tier_policy``
+    overrides the cost model's threshold table.  Compiled-tier batch
+    inputs stay device-resident across drains — repeat drains of the
+    same program over the same inputs pay zero host->device transfer
+    (``stats.residency_hits``).
     """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
                  pack_by_cost: bool = True, validate: bool = True,
-                 use_compiler: bool = True, compile_min: int = 2):
+                 use_compiler: bool = True, compile_min: int = 2,
+                 tier_policy: TierPolicy | None = None,
+                 residency_max: int = 32):
         self._sched = FleetScheduler(cfg, batch_size,
                                      pack_by_cost=pack_by_cost,
                                      validate=validate,
                                      use_compiler=use_compiler,
-                                     compile_min=compile_min)
+                                     compile_min=compile_min,
+                                     tier_policy=tier_policy,
+                                     residency_max=residency_max)
 
     @property
     def cfg(self) -> EGPUConfig:

@@ -25,6 +25,8 @@ slowest op on the CPU backend by an order of magnitude.
 from __future__ import annotations
 
 import functools
+import weakref
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +39,61 @@ from ..core.config import EGPUConfig
 from ..core.executor import make_step, pad_image, padded_length
 from ..core.isa import Op
 from ..core.machine import MachineState, init_state
+
+
+class ResidencyCache:
+    """Device-resident batch inputs for the compiled lock-step tier.
+
+    A drain of N same-program jobs transfers one ``(N, S)`` shared-memory
+    image (plus the TDX grid vector) host -> device before launching the
+    batched runner.  Serving workloads drain the *same* programs over the
+    same inputs repeatedly, so this cache keeps the already-transferred
+    device arrays resident across drains: a repeat drain whose key —
+    which embeds a content digest of the batch (per-job shared image +
+    TDX grid, order-sensitive, length-prefixed) — matches an entry
+    replays the resident buffers and pays **zero host -> device
+    transfer**.  That is only sound because the compiled
+    light path (:meth:`repro.core.blockc.CompiledProgram.run_light_dev`)
+    never donates its inputs — a donated buffer is consumed by XLA and
+    cannot be replayed.
+
+    Entries are LRU-bounded and **invalidated with the compile cache**:
+    each entry holds a weak reference to the :class:`CompiledProgram` it
+    was built against, and a lookup whose compiled program is no longer
+    that exact object (evicted and recompiled, or garbage-collected)
+    rebuilds rather than replays — the compiled program's identity is
+    the invalidation token, so the two caches cannot drift apart.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self._max = max_entries
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, key, cp, build):
+        """Return ``(arrays, hit)``: the device-resident input arrays
+        for ``key`` (whose content identity the caller encodes in the
+        key itself) if the entry was built against this exact ``cp``;
+        otherwise call ``build()`` (which must return the device
+        arrays), cache, and return them."""
+        e = self._entries.get(key)
+        if e is not None and e["cp"]() is cp:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return e["arrays"], True
+        arrays = build()
+        self._entries[key] = {"cp": weakref.ref(cp), "arrays": arrays}
+        self._entries.move_to_end(key)
+        while len(self._entries) > self._max:
+            self._entries.popitem(last=False)      # LRU eviction
+        self.misses += 1
+        return arrays, False
 
 
 def stack_states(states: list[MachineState]) -> MachineState:

@@ -5,6 +5,8 @@ is installed; without it the ``@given`` tests are collected but skipped
 (the strategy stubs are never executed).  Deterministic tests in the
 same modules keep running either way.
 """
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

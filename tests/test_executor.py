@@ -3,10 +3,9 @@
 One shared small config keeps jit cache warm across the suite.
 """
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.core import (Asm, EGPUConfig, Op, Typ, init_state, run_program)
+from repro.core import Asm, EGPUConfig, Typ, run_program
 from repro.core import machine as machine_mod
 
 CFG = EGPUConfig(max_threads=32, regs_per_thread=16, shared_kb=2,

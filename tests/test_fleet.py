@@ -168,21 +168,21 @@ def test_drain_requeues_jobs_when_compiled_batch_raises(monkeypatch):
     hs = [fleet.submit(b.image, d, tdx_dim=b.tdx_dim) for d in datas]
 
     calls = {"n": 0}
-    real_run_batch = CompiledProgram.run_batch
+    real_run_light = CompiledProgram.run_light_dev
 
-    def failing_run_batch(self, shared_inits, tdx_dims):
+    def failing_run_light(self, shared, tdx_dims):
         calls["n"] += 1
         if calls["n"] == 2:                 # second batch of the drain
             raise RuntimeError("injected batch failure")
-        return real_run_batch(self, shared_inits, tdx_dims)
+        return real_run_light(self, shared, tdx_dims)
 
-    monkeypatch.setattr(CompiledProgram, "run_batch", failing_run_batch)
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", failing_run_light)
     with pytest.raises(RuntimeError, match="injected"):
         fleet.drain()
     # first batch (2 jobs) completed — its results are stashed for the
     # next drain; the other 4 are back on the queue.  Nothing lost.
     assert fleet.pending == 4
-    monkeypatch.setattr(CompiledProgram, "run_batch", real_run_batch)
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", real_run_light)
     results = fleet.drain()
     assert sorted(results) == sorted(hs)      # salvaged + retried
     for d, h in zip(datas, hs):
@@ -261,6 +261,144 @@ def test_fleet_rejects_mismatched_config():
     fleet = Fleet(CFG)
     with pytest.raises(ValueError):
         fleet.submit(img)
+
+
+def _loop_prog(iters=64):
+    """Same-program loop job for the compiled/superblock fleet tiers."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    with a.loop(iters):
+        a.fadd(2, 2, 2)
+    a.sto(2, 1, 0)
+    a.stop()
+    return a.assemble(threads_active=32)
+
+
+def test_residency_cache_hits_on_repeat_drains():
+    """Repeat drains of the same program over the same inputs replay
+    the device-resident batch (nonzero hits), changed inputs miss, and
+    results stay bit-identical to the interpreter throughout."""
+    img = _loop_prog()
+    rng = np.random.default_rng(21)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(4)]
+    fleet = Fleet(CFG, batch_size=4)
+
+    def drain_and_check(batch_datas):
+        hs = [fleet.submit(img, d, tdx_dim=32) for d in batch_datas]
+        results = fleet.drain()
+        for d, h in zip(batch_datas, hs):
+            ref = run_program(img, shared_init=d, tdx_dim=32)
+            assert np.array_equal(machine_mod.shared_as_u32(ref),
+                                  results[h].shared_u32())
+            assert int(ref.cycles) == results[h].cycles
+            assert int(ref.steps) == results[h].steps
+            assert results[h].profile() == machine_mod.profile(ref)
+
+    drain_and_check(datas)
+    assert fleet.stats.residency_hits == 0
+    assert fleet.stats.residency_misses == 1
+    drain_and_check(datas)                    # identical content: replay
+    drain_and_check(datas)
+    assert fleet.stats.residency_hits == 2
+    assert fleet.stats.residency_misses == 1
+    drain_and_check([d + 1 for d in datas])   # new content: transfer
+    assert fleet.stats.residency_hits == 2
+    assert fleet.stats.residency_misses == 2
+
+
+def test_residency_cache_invalidated_with_compile_cache():
+    """A recompiled program (compile-cache eviction) must not replay
+    stale device buffers: the residency entry is keyed to the exact
+    CompiledProgram object it was built against."""
+    from repro.core import blockc
+
+    img = _loop_prog()
+    rng = np.random.default_rng(22)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(4)]
+    fleet = Fleet(CFG, batch_size=4)
+    for _ in range(2):
+        hs = [fleet.submit(img, d, tdx_dim=32) for d in datas]
+        results = fleet.drain()
+    assert fleet.stats.residency_hits == 1
+    blockc._CACHE.clear()                     # force a recompile
+    hs = [fleet.submit(img, d, tdx_dim=32) for d in datas]
+    results = fleet.drain()
+    assert fleet.stats.residency_hits == 1    # no stale replay
+    assert fleet.stats.residency_misses == 2
+    ref = run_program(img, shared_init=datas[0], tdx_dim=32)
+    assert np.array_equal(machine_mod.shared_as_u32(ref),
+                          results[hs[0]].shared_u32())
+
+
+def test_residency_cache_lru_bound():
+    """The cache never exceeds its bound; evicted batches just
+    re-transfer (a miss, never an error)."""
+    img = _loop_prog()
+    rng = np.random.default_rng(23)
+    fleet = Fleet(CFG, batch_size=2, residency_max=2)
+    batches = [[rng.standard_normal(32).astype(np.float32)
+                for _ in range(2)] for _ in range(4)]
+    for batch_datas in batches:               # 4 distinct batch contents
+        for d in batch_datas:
+            fleet.submit(img, d, tdx_dim=32)
+        fleet.drain()
+    assert len(fleet._sched._residency) <= 2
+    assert fleet.stats.residency_misses == 4
+    # the two youngest entries are still resident
+    for batch_datas in batches[-2:]:
+        for d in batch_datas:
+            fleet.submit(img, d, tdx_dim=32)
+        fleet.drain()
+    assert fleet.stats.residency_hits == 2
+
+
+def test_stats_consistent_after_failed_then_salvaged_drain(monkeypatch):
+    """Regression: across a failed drain and the delivering drain, every
+    job is counted into jobs/wall_s/tier counters exactly once, and the
+    delivered-but-precomputed results are reported via salvaged_jobs so
+    per-drain consumers don't double-dip the timing."""
+    from repro.core.blockc import CompiledProgram
+
+    img = _loop_prog()
+    rng = np.random.default_rng(31)
+    datas = [rng.standard_normal(32).astype(np.float32) for _ in range(6)]
+    fleet = Fleet(CFG, batch_size=2)
+    hs = [fleet.submit(img, d, tdx_dim=32) for d in datas]
+
+    calls = {"n": 0}
+    real = CompiledProgram.run_light_dev
+
+    def failing(self, shared, tdx):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected")
+        return real(self, shared, tdx)
+
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", failing)
+    with pytest.raises(RuntimeError):
+        fleet.drain()
+    s = fleet.stats
+    # only the successfully executed batch is accounted
+    assert s.jobs == s.compiled_jobs == s.superblock_jobs == 2
+    assert s.batches == s.compiled_batches == 1
+    assert s.salvaged_jobs == 0               # computed, not yet delivered
+    wall_after_fail = s.wall_s
+    assert wall_after_fail > 0
+
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", real)
+    results = fleet.drain()
+    assert sorted(results) == sorted(hs)
+    # each of the 6 jobs counted exactly once across both drains; the 2
+    # salvaged results added no second helping of jobs or wall time
+    assert s.jobs == s.compiled_jobs == s.superblock_jobs == 6
+    assert s.batches == s.compiled_batches == 3
+    assert s.salvaged_jobs == 2
+    assert s.jobs_per_sec == pytest.approx(s.jobs / s.wall_s)
+    for d, h in zip(datas, hs):
+        ref = run_program(img, shared_init=d, tdx_dim=32)
+        assert np.array_equal(machine_mod.shared_as_u32(ref),
+                              results[h].shared_u32())
 
 
 def test_alu16_masks_lodi_tdx_tdy():

@@ -3,7 +3,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import isa
-from repro.core.isa import Instr, Op, Typ
+from repro.core.isa import Instr, Op
 
 
 def test_opcode_count_is_61():

@@ -1,6 +1,5 @@
 """Pallas kernel sweeps: interpret-mode vs pure-jnp oracles across shapes,
 dtypes and activity masks (hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -20,10 +19,10 @@ def randf(*shape, dtype=jnp.float32):
 
 # --- wavefront_alu ----------------------------------------------------------
 
-@pytest.mark.parametrize("t,l", [(8, 128), (32, 128), (64, 256)])
+@pytest.mark.parametrize("t,lanes", [(8, 128), (32, 128), (64, 256)])
 @pytest.mark.parametrize("op", war.OPS)
-def test_wavefront_alu_shapes(t, l, op):
-    a, b, init = randf(t, l), randf(t, l), randf(t, l)
+def test_wavefront_alu_shapes(t, lanes, op):
+    a, b, init = randf(t, lanes), randf(t, lanes), randf(t, lanes)
     act = jnp.asarray(RNG.integers(0, 2, t // 8), jnp.int32)
     got = wak.wavefront_alu(a, b, init, act, op, interpret=True)
     exp = war.wavefront_alu_ref(a, b, init, act, op)
@@ -34,8 +33,8 @@ def test_wavefront_alu_shapes(t, l, op):
 @settings(max_examples=8, deadline=None)
 def test_wavefront_alu_mask_property(mask):
     """Inactive tiles keep init exactly (eGPU write_enable semantics)."""
-    t, l = 32, 128
-    a, b, init = randf(t, l), randf(t, l), randf(t, l)
+    t, lanes = 32, 128
+    a, b, init = randf(t, lanes), randf(t, lanes), randf(t, lanes)
     act = jnp.asarray(mask, jnp.int32)
     got = wak.wavefront_alu(a, b, init, act, "add", interpret=True)
     for i, m in enumerate(mask):

@@ -8,7 +8,6 @@ import pytest
 
 import repro.configs as C
 from repro.models import api, mamba2, xlstm
-from repro.models.common import ModelConfig
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,6 +1,5 @@
 """Benchmark-program tests: correctness vs numpy + cycle fidelity vs the
 paper's Tables 7/8 + the dynamic-scalability ablation."""
-import numpy as np
 import pytest
 
 from repro.core import benchmark_config

@@ -1,0 +1,203 @@
+"""Tier-policy tests: the static cost model behind ``mode="auto"``.
+
+The contract under test: tier selection is a *static* decision computed
+from the path simulation alone — programs on the cheap side of the
+calibrated crossover stay on the basic-block driver, programs past it
+(or wide lock-step batches, or long fused traces) take the superblock
+runner; explicit ``mode=`` overrides always win; and the light path
+(``run_light`` / ``run_batch_light``) returns bit-identical
+shared/cycles/halted leaves on every tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Asm, BlockCompileError, CompiledProgram,
+                        DEFAULT_TIER_POLICY, EGPUConfig, TierPolicy,
+                        compile_program, run_program)
+from repro.core import blockc
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+
+def _saxpy(iters, cfg=CFG):
+    """One LOOP back-edge per iteration — the crossover stress test."""
+    a = Asm(cfg)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.lod(3, 1, 32)
+    with a.loop(iters):
+        a.fmul(3, 3, 4)
+        a.fadd(3, 3, 2)
+    a.sto(3, 1, 32)
+    a.stop()
+    rng = np.random.default_rng(iters)
+    return (a.assemble(threads_active=32),
+            rng.standard_normal(64).astype(np.float32))
+
+
+def _straightline(n_instr, cfg=CFG):
+    """A long straight-line program (no loops at all)."""
+    a = Asm(cfg)
+    a.tdx(1)
+    a.lodi(2, 1)
+    for _ in range(n_instr):
+        a.add(2, 2, 1)
+    a.sto(2, 1, 0)
+    a.stop()
+    return a.assemble(threads_active=32, schedule_nops=False)
+
+
+# ---------------------------------------------------------------- policy
+def test_crossover_boundary_selects_the_faster_tier():
+    """Programs straddling the calibrated crossover: below the
+    dispatch threshold the fixed superblock overhead loses and auto
+    stays on blocks; above it the dispatch savings win and auto takes
+    the superblock (the `auto_tier` sweep in benchmarks/superblock.py
+    measures that these *are* the faster sides)."""
+    below, _ = _saxpy(8)        # 10 dispatches, short unrolled trace
+    above, _ = _saxpy(512)      # 514 dispatches
+    assert compile_program(below).mode == "blocks"
+    assert compile_program(above).mode == "superblock"
+    thr = DEFAULT_TIER_POLICY.table["min_backedge_dispatches"]
+    f_below = compile_program(below).tier_features
+    f_above = compile_program(above).tier_features
+    assert f_below["dispatches"] < thr <= f_above["dispatches"]
+
+
+def test_wide_batches_always_take_the_superblock():
+    """The block driver's per-dispatch carried-state copies scale with
+    the batch width, so an eligible program on a wide lock-step batch
+    goes superblock even below the single-core crossover."""
+    img, _ = _saxpy(8)
+    wide = DEFAULT_TIER_POLICY.table["batch_superblock_min"]
+    assert compile_program(img, batch_hint=1).mode == "blocks"
+    assert compile_program(img, batch_hint=wide).mode == "superblock"
+    # batch classes collapse: every wide hint shares one cache entry
+    assert compile_program(img, batch_hint=wide) \
+        is compile_program(img, batch_hint=4 * wide)
+
+
+def test_long_fused_trace_takes_the_superblock():
+    """A straight-line program past ``min_trace_fusion`` wins on
+    cross-block fusion despite having (almost) no dispatches."""
+    thr = DEFAULT_TIER_POLICY.table["min_trace_fusion"]
+    long_img = _straightline(thr + 16)
+    short_img = _straightline(32)
+    assert compile_program(long_img).mode == "superblock"
+    assert compile_program(short_img).mode == "blocks"
+
+
+def test_mode_overrides_always_force_their_tier():
+    """Explicit ``mode=`` beats the cost model on both sides of the
+    crossover, and results stay bit-identical to the interpreter."""
+    for iters in (8, 512):
+        img, data = _saxpy(iters)
+        cb = compile_program(img, mode="blocks")
+        cs = compile_program(img, mode="superblock")
+        assert cb.mode == "blocks" and cb.switch_dispatches > 0
+        assert cs.mode == "superblock" and cs.switch_dispatches == 0
+        ref = run_program(img, shared_init=data, tdx_dim=32)
+        for cp in (cb, cs):
+            got = cp.run(shared_init=data, tdx_dim=32)
+            for leaf in ref._fields:
+                assert np.array_equal(np.asarray(getattr(ref, leaf)),
+                                      np.asarray(getattr(got, leaf))), \
+                    (iters, cp.mode, leaf)
+
+
+def test_policy_threshold_table_overrides():
+    """Every threshold is overridable; instances are value-equal and
+    hashable (they key the compile cache)."""
+    eager = TierPolicy(min_backedge_dispatches=2)
+    never = TierPolicy(min_backedge_dispatches=10**9,
+                       min_trace_fusion=10**9, min_fori_execd=10**9)
+    img, _ = _saxpy(16)
+    assert compile_program(img).mode == "blocks"
+    assert compile_program(img, policy=eager).mode == "superblock"
+    assert compile_program(img, policy=never).mode == "blocks"
+    assert TierPolicy(min_backedge_dispatches=2) == eager
+    assert hash(TierPolicy(min_backedge_dispatches=2)) == hash(eager)
+    assert eager != never and eager != DEFAULT_TIER_POLICY
+    assert TierPolicy() == DEFAULT_TIER_POLICY
+    with pytest.raises(ValueError):
+        TierPolicy(min_backedge_dispatch=1)        # typo'd key
+    # the table property is a copy: mutating it cannot corrupt the policy
+    t = eager.table
+    t["min_backedge_dispatches"] = 999
+    assert eager.table["min_backedge_dispatches"] == 2
+
+
+def test_features_expose_the_simulation_inputs():
+    img, _ = _saxpy(400)
+    cp = compile_program(img, mode="superblock")
+    f = DEFAULT_TIER_POLICY.features(cp.sim)
+    assert f["eligible"]
+    assert f["dispatches"] == cp.sim.dispatches > 400
+    assert f["execd"] == cp.sim.steps
+    assert f["fori_reps"] == 1              # one big fori-run repeat
+    assert f["fori_trips"] == (400,)
+    assert f["fori_execd"] > 0
+    assert f["trace_cost"] == blockc._trace_cost(cp.schedule)
+    # tiny loop: everything unrolls, nothing runs as fori
+    small, _ = _saxpy(8)
+    fs = DEFAULT_TIER_POLICY.features(compile_program(small).sim)
+    assert fs["fori_reps"] == 0 and fs["unrolled_reps"] == 1
+    assert fs["fori_trips"] == ()
+
+
+def test_ineligible_schedule_stays_on_blocks_for_auto():
+    """Over-budget paths: auto -> blocks, forced superblock raises —
+    under any policy."""
+    img, _ = _saxpy(200)
+    old = blockc._MAX_TRACE
+    blockc._MAX_TRACE = 4
+    try:
+        cp = CompiledProgram(img, 32,
+                             policy=TierPolicy(min_backedge_dispatches=1))
+        assert cp.mode == "blocks"
+        assert not cp.tier_features["eligible"]
+        with pytest.raises(BlockCompileError):
+            CompiledProgram(img, 32, mode="superblock")
+    finally:
+        blockc._MAX_TRACE = old
+
+
+# ------------------------------------------------------------ light path
+@pytest.mark.parametrize("mode", ["blocks", "superblock"])
+def test_run_light_bit_identical_to_run(mode):
+    """run_light()/(batch) == run()/(batch) on shared/cycles/halted,
+    bit for bit, on both compiled tiers."""
+    img, data = _saxpy(64)
+    cp = compile_program(img, mode=mode)
+    ref = cp.run(shared_init=data, tdx_dim=32)
+    sh, cyc, halted = cp.run_light(shared_init=data, tdx_dim=32)
+    assert np.array_equal(np.asarray(ref.shared), np.asarray(sh))
+    assert int(ref.cycles) == cyc
+    assert bool(ref.halted) == halted
+
+    datas = [data, data * 2, data + 3, None]
+    refb = cp.run_batch(datas, [32, 32, 16, 8])
+    shb, cycb, hb = cp.run_batch_light(datas, [32, 32, 16, 8])
+    assert np.array_equal(np.asarray(refb.shared), np.asarray(shb))
+    assert np.array_equal(np.asarray(refb.cycles), np.asarray(cycb))
+    assert np.array_equal(np.asarray(refb.halted), np.asarray(hb))
+
+
+def test_run_light_dev_does_not_consume_its_input():
+    """The light path never donates: the same device buffer can be
+    replayed across calls (what the fleet residency cache relies on)."""
+    import jax.numpy as jnp
+
+    img, data = _saxpy(32)
+    cp = compile_program(img, mode="superblock")
+    S = CFG.shared_words
+    shared = np.zeros((2, S), np.uint32)
+    shared[0, :64] = data.view(np.uint32)
+    shared[1, :64] = (data * 2).view(np.uint32)
+    dev = jnp.asarray(shared)
+    tdx = jnp.asarray([32, 32], jnp.int32)
+    first = np.asarray(cp.run_light_dev(dev, tdx)[0])
+    second = np.asarray(cp.run_light_dev(dev, tdx)[0])   # replay
+    assert np.array_equal(first, second)
