@@ -55,6 +55,20 @@ def _compiled_metrics(data: dict) -> dict[str, float]:
     ]
     if vals:
         m["auto_tier/worst_efficiency"] = round(min(vals), 3)
+    roofline = data.get("roofline", {})
+    lane = roofline.get("suite_lane_utilization")
+    if lane is not None:
+        # exact counter-derived ratio (active / offered lane-steps):
+        # hardware-independent, so any drop is a real predication or
+        # suite-composition change, not runner noise
+        m["roofline/suite_lane_utilization"] = lane
+    roof = roofline.get("roof", {})
+    if "superblock" in roof and "blocks" in roof:
+        peak_super = roof["superblock"]["peak_minstrs_per_sec"]
+        peak_blocks = roof["blocks"]["peak_minstrs_per_sec"]
+        m["roofline/superblock_vs_blocks_peak"] = round(
+            peak_super / peak_blocks, 3
+        )
     return m
 
 

@@ -22,6 +22,7 @@ regression cannot rot silently.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -35,6 +36,7 @@ import numpy as np  # noqa: E402
 
 from benchmarks.fleet import build_jobs, fleet_config  # noqa: E402
 from repro.core import compile_program, run_compiled, run_program  # noqa: E402
+from repro.obs import Tracer  # noqa: E402
 from repro.programs import (build_bitonic, build_fft, build_matmul,  # noqa: E402
                             build_reduction, build_transpose)
 
@@ -184,9 +186,16 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_compiled.json"))
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a repro.obs trace of the whole run")
     args = ap.parse_args()
 
-    out = bench(args.smoke, args.batch, args.repeats)
+    tracer = Tracer("bench-compiled") if args.trace else None
+    with (tracer if tracer is not None else contextlib.nullcontext()):
+        out = bench(args.smoke, args.batch, args.repeats)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote trace {args.trace}", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows_csv(out):

@@ -16,6 +16,7 @@ before timing so the comparison is steady-state throughput.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -27,6 +28,7 @@ sys.path.insert(0, os.path.join(
 
 from repro.core import EGPUConfig, run_program  # noqa: E402
 from repro.fleet import Fleet  # noqa: E402
+from repro.obs import Tracer  # noqa: E402
 from repro.programs import (build_bitonic, build_fft, build_matmul,  # noqa: E402
                             build_reduction, build_transpose)
 
@@ -220,13 +222,20 @@ def main() -> None:
                     help="quick CI pass: one light round, no json")
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_fleet.json"))
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a repro.obs trace of the whole run")
     args = ap.parse_args()
 
     if args.smoke:
         args.rounds, args.repeats, args.mixes = 1, 1, "light"
-    rows = bench(args.batch, args.rounds, args.repeats,
-                 verify=not args.no_verify,
-                 mixes=tuple(args.mixes.split(",")))
+    tracer = Tracer("bench-fleet") if args.trace else None
+    with (tracer if tracer is not None else contextlib.nullcontext()):
+        rows = bench(args.batch, args.rounds, args.repeats,
+                     verify=not args.no_verify,
+                     mixes=tuple(args.mixes.split(",")))
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote trace {args.trace}", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
         if "residency_speedup" in r:

@@ -1,314 +1,173 @@
-"""Roofline analysis with loop-calibrated cost extraction.
+"""GPGPU roofline: achieved instruction throughput per execution tier.
 
-Methodology (documented in EXPERIMENTS.md §Roofline):
+Classic rooflines bound FLOPs against memory traffic; a soft GPGPU's
+equivalent bounds *architectural instruction throughput* against the
+machine's issue and data-parallel limits.  For every suite program the
+host path simulation's :class:`~repro.obs.EventCounters` give the exact
+retired-instruction and issue-cycle counts (bit-identical to the
+interpreter's counters), so dividing by each tier's measured
+steady-state wall time yields achieved instrs/sec per tier — and two
+utilization terms bound how much of the paper's scaling headroom each
+program actually uses:
 
-XLA's ``compiled.cost_analysis()`` counts a while/scan loop body ONCE
-regardless of trip count (verified by a controlled probe: a scan of 1, 8
-and 32 chained matmuls all report identical FLOPs).  Every production
-model here scans its layer stack (and SSD chunk / recurrent seq loops),
-so the raw dry-run numbers undercount.  We recover exact totals by
-compiling small *fully unrolled* variants (``cfg.scan_layers=False``)
-over a grid of (layers L, sequence S, batch B) and fitting the exact
-polynomial cost structure
+* **lane utilization** — active / offered vector lane-steps: the
+  fraction of the SIMT data-parallel roof not lost to predicated-off
+  lanes and partial warps (TSC masks);
+* **issue efficiency** — retired instructions / issue cycles: the
+  fraction of the dual-issue roof not lost to hazard NOP padding.
 
-    f(L, S, B) = [ (1, S, S^2) (x) (1, L) (x) (1, B) ]  .  c
+Rows are printed in the harness CSV contract and merged into
+``BENCH_compiled.json`` under the ``"roofline"`` key (next to the
+``"superblock"`` / ``"auto_tier"`` sections), so the trend pipeline can
+track throughput per tier release over release.
 
-— every HLO cost term (FLOPs, bytes accessed, collective bytes) is
-polynomial of degree <= 2 in S (attention), affine in L (stacked layers)
-and affine in B (the B^0 component is the weight traffic / gradient
-collectives, which do not scale with batch).  zamba2 adds the
-shared-attention site count G as a basis dimension; decode cells drop
-the S^2 term (cache ops are linear).  The fit is exact up to top_k sort
-terms (negligible).
-
-Roofline terms per (arch x shape), single-pod mesh, v5e constants:
-
-    compute    = per-device FLOPs / 197e12
-    memory     = per-device bytes accessed / 819e9
-    collective = per-device collective bytes / 50e9
-
-(per-device x 256 chips == the global formula in the brief).
+  PYTHONPATH=src python -m benchmarks.roofline             # full
+  PYTHONPATH=src python -m benchmarks.roofline --smoke     # quick pass
 """
 from __future__ import annotations
 
 import argparse
-import itertools
 import json
-import math
 import os
+import sys
 import time
 
-import numpy as np
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+from benchmarks.fleet import fleet_config  # noqa: E402
+from benchmarks.superblock import _loop_nested, _loop_saxpy  # noqa: E402
+from repro.core import compile_program, run_program  # noqa: E402
+from repro.core.blockc import BlockCompileError  # noqa: E402
+from repro.programs import (build_bitonic, build_fft, build_matmul,  # noqa: E402
+                            build_reduction, build_transpose)
 
-
-# --------------------------------------------------------------------------
-# fit plans
-# --------------------------------------------------------------------------
-
-def _fit_plan(arch: str, kind: str):
-    """Returns (L_combos, S_points, B_points, use_s2, use_g)."""
-    if arch == "zamba2_1p2b":
-        Ls = ((6, 6), (12, 6), (6, 3))
-        use_g = True
-    elif arch == "xlstm_350m":
-        Ls = ((8, 0), (16, 0))
-        use_g = False
-    elif arch == "seamless_m4t_large_v2":
-        Ls = ((2, 0), (4, 0))
-        use_g = False
-    else:
-        Ls = ((1, 0), (2, 0))
-        use_g = False
-
-    if kind == "decode":
-        S = (256, 512)
-        use_s2 = False
-    elif arch == "xlstm_350m":
-        S = (4, 8, 16) if kind == "train" else (2, 4, 8)
-        use_s2 = kind == "train"     # mLSTM parallel form is quadratic
-    else:
-        S = (256, 512, 1024)
-        use_s2 = True
-    return Ls, S, use_s2, use_g
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _basis(L, G, S, B, use_s2, use_g):
-    s_terms = [1.0, S, S * S] if use_s2 else [1.0, S]
-    l_terms = [1.0, L, G] if use_g else [1.0, L]
-    return [st * lt * bt for st in s_terms for lt in l_terms
-            for bt in (1.0, B)]
-
-
-def _small_cfg(cfg, arch, L, period):
-    kw = dict(scan_layers=False)
-    if arch == "zamba2_1p2b":
-        return cfg.replace(n_layers=L, shared_attn_period=period, **kw)
-    if arch == "seamless_m4t_large_v2":
-        return cfg.replace(n_layers=L, enc_layers=L // 2, dec_layers=L // 2,
-                           **kw)
-    return cfg.replace(n_layers=L, **kw)
-
-
-def measure_point(arch, shape_name, L, period, S, B, mesh):
-    import repro.configs as C
-    import jax
-    from repro.launch import specs as specs_mod
-    from repro.launch.dryrun import collective_bytes
-
-    base_cfg = C.get(arch)
-    shape = C.SHAPES[shape_name]
-    cfg = _small_cfg(base_cfg, arch, L, period)
-    enc_len = None
-    if cfg.family == "vlm":
-        frac = cfg.num_patches / shape.seq_len
-        cfg = cfg.replace(num_patches=max(4, int(round(frac * S))))
-    if cfg.family == "encdec" and shape.kind == "decode":
-        enc_len = max(16, int(specs_mod.ENC_LEN * S / shape.seq_len))
-    sshape = C.ShapeSpec(shape.name, S, B, shape.kind)
-    cell = specs_mod.build_cell(arch, shape_name, mesh, cfg=cfg,
-                                shape=sshape, enc_len=enc_len, pin_out=True)
-    with mesh:
-        kw = {}
-        if cell.out_shardings is not None:
-            kw["out_shardings"] = cell.out_shardings
-        compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
-                           donate_argnums=cell.donate_argnums, **kw
-                           ).lower(*cell.args).compile()
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
-    coll = collective_bytes(compiled.as_text())
-    return {
-        "flops": float(ca.get("flops") or 0.0),
-        "bytes": float(ca.get("bytes accessed") or 0.0),
-        "coll": float(coll["total_bytes"]),
-    }
-
-
-def _extrap_b(v16, v32, b_full):
-    """Pointwise affine-in-B extrapolation, clamped monotone (cost is
-    affine and non-decreasing in batch)."""
-    slope = max(0.0, (v32 - v16) / 16.0)
-    return max(v32, v16 + slope * (b_full - 16))
-
-
-def _extrap_s(svals, s_points, s_full, use_s2):
-    """Quadratic (or linear) in S with non-negative leading coefficient;
-    falls back to monotone linear if the quadratic term fits negative
-    (fusion-regime noise must not turn into a negative S^2 cost)."""
-    s = np.array(s_points, np.float64)
-    y = np.array(svals, np.float64)
-    if use_s2 and len(s) >= 3:
-        v = np.vander(s / s[-1], 3)            # normalized for conditioning
-        c2, c1, c0 = np.linalg.solve(v, y)
-        if c2 >= 0 and c1 >= -1e-9 * abs(y[-1]):
-            x = s_full / s[-1]
-            return float(max(c2 * x * x + max(c1, 0) * x + c0, y.max()))
-    slope = max(0.0, (y[-1] - y[0]) / (s[-1] - s[0]))
-    return float(max(y[-1] + slope * (s_full - s[-1]), y.max()))
-
-
-def _extrap_l(lvals, l_combos, l_full, g_full, use_g):
-    """Affine in L (and shared-site count G for zamba2), slopes clamped
-    non-negative."""
-    if use_g and len(l_combos) >= 3:
-        (l1, p1), (l2, p2), (l3, p3) = l_combos[:3]
-        g1, g2, g3 = (math.ceil(l1 / p1), math.ceil(l2 / p2),
-                      math.ceil(l3 / p3))
-        a = np.array([[1, l1, g1], [1, l2, g2], [1, l3, g3]], np.float64)
-        c0, cl, cg = np.linalg.solve(a, np.array(lvals[:3], np.float64))
-        cl, cg = max(cl, 0.0), max(cg, 0.0)
-        return float(max(c0 + cl * l_full + cg * g_full, max(lvals)))
-    (l1, _), (l2, _) = l_combos[:2]
-    slope = max(0.0, (lvals[1] - lvals[0]) / (l2 - l1))
-    return float(max(lvals[1] + slope * (l_full - l2), max(lvals)))
-
-
-def calibrate_cell(arch, shape_name, mesh, cache_dir="results/roofline_fit",
-                   verbose=True):
-    import repro.configs as C
-    os.makedirs(cache_dir, exist_ok=True)
-    fname = os.path.join(cache_dir, f"{arch}__{shape_name}.json")
-    if os.path.exists(fname):
-        return json.load(open(fname))
-
-    cfg = C.get(arch)
-    shape = C.SHAPES[shape_name]
-    Ls, Ss, use_s2, use_g = _fit_plan(arch, shape.kind)
-    Bs = (1,) if shape.global_batch == 1 else (16, 32)
-
-    # measure the grid
-    points = {}
-    for (L, period), S, B in itertools.product(Ls, Ss, Bs):
-        t0 = time.time()
-        m = measure_point(arch, shape_name, L, period, S, B, mesh)
-        points[(L, period, S, B)] = m
-        if verbose:
-            print(f"  point L={L} S={S} B={B}: flops={m['flops']:.3e} "
-                  f"({time.time()-t0:.0f}s)", flush=True)
-
-    if use_g:
-        L_full = cfg.n_layers
-        G_full = len(range(0, cfg.n_layers, cfg.shared_attn_period))
-    else:
-        L_full, G_full = cfg.n_layers, 0
-
-    out = {"arch": arch, "shape": shape_name,
-           "fit_points": len(points),
-           "points": {f"L{L}_p{p}_S{S}_B{B}": m
-                      for (L, p, S, B), m in points.items()}}
-    for key in ("flops", "bytes", "coll"):
-        # hierarchical monotone extrapolation: B -> S -> (L, G)
-        lvals = []
-        for (L, period) in Ls:
-            svals = []
-            for S in Ss:
-                if len(Bs) == 2:
-                    vb = _extrap_b(points[(L, period, S, 16)][key],
-                                   points[(L, period, S, 32)][key],
-                                   shape.global_batch)
-                else:
-                    vb = points[(L, period, S, Bs[0])][key]
-                svals.append(vb)
-            lvals.append(_extrap_s(svals, Ss, shape.seq_len, use_s2))
-        out[key] = _extrap_l(lvals, Ls, L_full, G_full, use_g)
-    with open(fname, "w") as f:
-        json.dump(out, f, indent=1)
+def _suite(cfg, smoke: bool):
+    """Straight-line *and* loop-heavy programs: the former exercise the
+    blocks tier's fused superinstructions, the latter the superblock
+    tier's folded back-edges."""
+    out = [build_reduction(cfg, 32), build_transpose(cfg, 16),
+           build_matmul(cfg, 8), _loop_saxpy(cfg, 512)]
+    if not smoke:
+        out += [build_reduction(cfg, 32, use_dot=True),
+                build_bitonic(cfg, 16), build_fft(cfg, 16),
+                _loop_saxpy(cfg, 1024), _loop_nested(cfg, 32, 16)]
     return out
 
 
-# --------------------------------------------------------------------------
-# Roofline table assembly
-# --------------------------------------------------------------------------
-
-def model_flops(arch, shape, params_total, cfg):
-    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference); N = active params
-    excluding the embedding lookup."""
-    n = params_total
-    embed = cfg.vocab * cfg.d_model
-    n_eff = n - embed
-    if cfg.num_experts:
-        expert = cfg.n_layers * cfg.num_experts * 3 * cfg.d_model \
-            * cfg.expert_d_ff
-        n_eff = n_eff - expert + expert * cfg.top_k / cfg.num_experts
-    if shape.kind == "train":
-        return 6.0 * n_eff * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n_eff * shape.global_batch * shape.seq_len
-    return 2.0 * n_eff * shape.global_batch
+def _time(f, repeats: int) -> float:
+    f()                                    # warm the jit/compile caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
-def roofline_row(arch, shape_name, dry_rec, cal, chips=256):
-    import repro.configs as C
-    cfg = C.get(arch)
-    shape = C.SHAPES[shape_name]
-    f_dev, b_dev, c_dev = cal["flops"], cal["bytes"], cal["coll"]
-    t_comp = f_dev / PEAK_FLOPS
-    t_mem = b_dev / HBM_BW
-    t_coll = c_dev / ICI_BW
-    dominant = max(("compute", t_comp), ("memory", t_mem),
-                   ("collective", t_coll), key=lambda kv: kv[1])[0]
-    mf = model_flops(arch, shape, dry_rec.get("params", 0), cfg)
-    useful = mf / (f_dev * chips) if f_dev else 0.0
-    bound = max(t_comp, t_mem, t_coll)
-    return {
-        "arch": arch, "shape": shape_name,
-        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
-        "dominant": dominant, "model_flops": mf,
-        "useful_flops_ratio": useful,
-        "roofline_fraction": t_comp / bound if bound else 0.0,
-        "flops_per_device": f_dev, "bytes_per_device": b_dev,
-        "coll_bytes_per_device": c_dev,
-    }
+def _tier_times(b, repeats: int) -> dict[str, float | None]:
+    run = dict(shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    times: dict[str, float | None] = {
+        "interp": _time(lambda: run_program(b.image, **run), repeats)}
+    cp_b = compile_program(b.image, mode="blocks")
+    times["blocks"] = _time(lambda: cp_b.run(**run), repeats)
+    try:
+        cp_s = compile_program(b.image, mode="superblock")
+    except BlockCompileError:
+        times["superblock"] = None         # no foldable static path
+    else:
+        times["superblock"] = _time(lambda: cp_s.run(**run), repeats)
+    return times
 
 
-def main():
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=512")
-    import jax  # noqa: F401
-    from repro.launch import mesh as mesh_mod
-    import repro.configs as C
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun-dir", default="results/dryrun")
-    ap.add_argument("--out", default="results/roofline")
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    args = ap.parse_args()
-    os.makedirs(args.out, exist_ok=True)
-    mesh = mesh_mod.make_production_mesh()
-
-    cells = [(a, s.name) for a, s, ok, _ in C.cells() if ok]
-    # cheap cells first so partial results are useful early
-    order = {"decode_32k": 0, "long_500k": 1, "prefill_32k": 2, "train_4k": 3}
-    cells.sort(key=lambda c: order[c[1]])
-    if args.arch:
-        cells = [(a, s) for a, s in cells if a == args.arch
-                 and (args.shape is None or s == args.shape)]
+def bench(smoke: bool = False, repeats: int | None = None) -> dict:
+    cfg = fleet_config()
+    repeats = repeats or (2 if smoke else 5)
     rows = []
-    for arch, shape in cells:
-        dr = os.path.join(args.dryrun_dir, f"{arch}__{shape}__16x16.json")
-        dry = json.load(open(dr)) if os.path.exists(dr) else {}
-        try:
-            print(f"calibrating {arch} {shape}", flush=True)
-            cal = calibrate_cell(arch, shape, mesh)
-            row = roofline_row(arch, shape, dry, cal)
-            rows.append(row)
-            print(f"OK  {arch:22s} {shape:12s} comp={row['t_compute_s']:.2e}s "
-                  f"mem={row['t_memory_s']:.2e}s "
-                  f"coll={row['t_collective_s']:.2e}s "
-                  f"dom={row['dominant']:10s} "
-                  f"useful={row['useful_flops_ratio']:.2f}", flush=True)
-            with open(os.path.join(args.out, "roofline.json"), "w") as f:
-                json.dump(rows, f, indent=1)
-        except Exception as e:
-            import traceback
-            print(f"FAIL {arch} {shape}: {type(e).__name__}: {e}")
-            traceback.print_exc(limit=2)
+    for b in _suite(cfg, smoke):
+        ec = compile_program(b.image).event_counters()
+        times = _tier_times(b, repeats)
+        row = {
+            "name": b.name,
+            "instrs": ec.instrs, "cycles": ec.cycles,
+            "loop_backedges": ec.loop_backedges,
+            "lane_utilization": round(ec.lane_utilization, 4),
+            "issue_efficiency": round(ec.instrs / ec.cycles, 4)
+            if ec.cycles else 1.0,
+            "tiers": {},
+        }
+        for tier, t in times.items():
+            if t is None:
+                continue
+            row["tiers"][tier] = {
+                "us": round(t * 1e6, 1),
+                "minstrs_per_sec": round(ec.instrs / t / 1e6, 3),
+            }
+        rows.append(row)
+
+    # the roof per tier: the best throughput any program achieved on it
+    roof = {}
+    for tier in ("interp", "blocks", "superblock"):
+        vals = [r["tiers"][tier]["minstrs_per_sec"]
+                for r in rows if tier in r["tiers"]]
+        if vals:
+            roof[tier] = {"peak_minstrs_per_sec": max(vals),
+                          "programs": len(vals)}
+    offered = sum(r["instrs"] / max(r["lane_utilization"], 1e-9)
+                  for r in rows if r["lane_utilization"] > 0)
+    active = sum(r["instrs"] for r in rows if r["lane_utilization"] > 0)
+    return {"programs": rows, "roof": roof,
+            "suite_lane_utilization":
+                round(active / offered, 4) if offered else 1.0}
+
+
+def rows_csv(out: dict) -> list[tuple]:
+    rows = []
+    for r in out["programs"]:
+        for tier, t in r["tiers"].items():
+            rows.append((f"roofline/{r['name']}_{tier}", t["us"],
+                         f"minstrs_per_sec={t['minstrs_per_sec']};"
+                         f"lane_util={r['lane_utilization']};"
+                         f"issue_eff={r['issue_efficiency']}"))
+    return rows
+
+
+def _merge_json(path: str, out: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["roofline"] = out
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced suite, no json write")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
+                                                   "BENCH_compiled.json"))
+    args = ap.parse_args()
+
+    out = bench(args.smoke, args.repeats)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_csv(out):
+        print(f"{name},{us},{derived}")
+
+    roof = ", ".join(f"{t}={v['peak_minstrs_per_sec']}"
+                     for t, v in out["roof"].items())
+    print(f"# peak Minstrs/s per tier: {roof}; suite lane utilization: "
+          f"{out['suite_lane_utilization']}", file=sys.stderr)
+    if not args.smoke:      # CI pass: don't clobber the tracked numbers
+        _merge_json(args.json, out)
+        print(f"# merged into {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ the basic-block tier regresses below the gate threshold.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -50,6 +51,7 @@ from repro.core import Asm, compile_program, run_program  # noqa: E402
 from repro.core.blockc import (DEFAULT_TIER_POLICY, _sched_insts,  # noqa: E402
                                _trace_cost)
 from repro.fleet import Fleet  # noqa: E402
+from repro.obs import Tracer  # noqa: E402
 from repro.programs import build_matmul, build_transpose  # noqa: E402
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -388,9 +390,16 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_compiled.json"))
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a repro.obs trace of the whole run")
     args = ap.parse_args()
 
-    out = bench(args.smoke, args.batch, args.repeats)
+    tracer = Tracer("bench-superblock") if args.trace else None
+    with (tracer if tracer is not None else contextlib.nullcontext()):
+        out = bench(args.smoke, args.batch, args.repeats)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote trace {args.trace}", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows_csv(out):

@@ -80,6 +80,8 @@ entirely.
 from __future__ import annotations
 
 import functools
+import hashlib
+import time
 from typing import Any, NamedTuple
 
 import jax
@@ -97,6 +99,7 @@ from .executor import (_PF_IMM, _PF_OP, _PF_RA, _PF_RB, _PF_RD, _PF_TSC,
                        _TC_WRITES_RD, pad_image, tables_np)
 from .isa import Op, Typ
 from .machine import MachineState
+from ..obs import trace as obs_trace
 
 _I32 = jnp.int32
 _U32 = jnp.uint32
@@ -287,6 +290,26 @@ def _count_reps(items) -> int:
     return n
 
 
+def _sched_rep_trips(items) -> int:
+    """Summed trip counts over every repeat node (each node once, like
+    ``_PlanStats.fori_trips``) — event-counter bookkeeping."""
+    n = 0
+    for it in items:
+        if not isinstance(it, (int, np.integer)):
+            n += it[2] + _sched_rep_trips(it[1])
+    return n
+
+
+def _sched_rep_execd(items) -> int:
+    """Instructions executed inside any repeat node (top-level bodies
+    times count, nesting included) — event-counter bookkeeping."""
+    n = 0
+    for it in items:
+        if not isinstance(it, (int, np.integer)):
+            n += it[2] * _sched_execd(it[1])
+    return n
+
+
 #: default :class:`TierPolicy` threshold table.  Calibrated on the CPU
 #: backend by the ``auto_tier`` crossover sweep in
 #: ``benchmarks/superblock.py`` (loop_saxpy back-edge counts 8 -> 2048,
@@ -410,18 +433,37 @@ class TierPolicy:
         caller that already extracted them doesn't pay the schedule
         walk twice."""
         f = self.features(sim) if features is None else features
+        tier, rule = self._decide(f, batch)
+        tr = obs_trace.current_tracer()
+        if tr is not None:
+            feats = {k: list(v) if isinstance(v, tuple) else v
+                     for k, v in f.items()}
+            tr.event("tier_decision", tier=tier, rule=rule,
+                     batch=int(batch), features=feats,
+                     thresholds=dict(self._table))
+        return tier
+
+    def _decide(self, f: dict, batch: int) -> tuple[str, str]:
+        """(tier, first-matching rule) — the loggable decision core."""
         if not f["eligible"]:
-            return "blocks"
+            return "blocks", "ineligible (no schedule or over trace cap)"
         t = self._table
         if batch >= t["batch_superblock_min"]:
-            return "superblock"
+            return "superblock", (f"batch {batch} >= "
+                                  f"batch_superblock_min "
+                                  f"{t['batch_superblock_min']}")
         if f["dispatches"] >= t["min_backedge_dispatches"]:
-            return "superblock"
+            return "superblock", (f"dispatches {f['dispatches']} >= "
+                                  f"min_backedge_dispatches "
+                                  f"{t['min_backedge_dispatches']}")
         if f["trace_cost"] >= t["min_trace_fusion"]:
-            return "superblock"
+            return "superblock", (f"trace_cost {f['trace_cost']} >= "
+                                  f"min_trace_fusion "
+                                  f"{t['min_trace_fusion']}")
         if f["fori_execd"] >= t["min_fori_execd"]:
-            return "superblock"
-        return "blocks"
+            return "superblock", (f"fori_execd {f['fori_execd']} >= "
+                                  f"min_fori_execd {t['min_fori_execd']}")
+        return "blocks", "no superblock rule fired"
 
 
 #: the policy ``mode="auto"`` uses unless a caller overrides it
@@ -522,6 +564,10 @@ class _SimResult(NamedTuple):
     stat_instrs: np.ndarray
     dispatches: int             # block-driver switch dispatches on this path
     schedule: tuple | None      # folded superblock schedule (None: too big)
+    # event counters (python ints — unbounded, never wrapped):
+    backedges: int = 0          # taken LOOP back-edges on the path
+    lane_offered: int = 0       # vector retires x runtime thread count
+    lane_active: int = 0        # of which the TSC mask left on
 
 
 def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
@@ -552,6 +598,9 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
     stat_c = [0] * isa.NUM_OP_CLASSES
     stat_i = [0] * isa.NUM_OP_CLASSES
     dispatches = 0
+    backedges = 0
+    lane_offered = lane_active = 0
+    act_lut: dict[int, int] = {}    # tsc code -> active lanes (16 codes)
     rec = _PathRecorder(_MAX_TRACE)
 
     while (not halted) and steps < cfg.max_steps and 0 <= pc < prog_len:
@@ -571,6 +620,13 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
             dispatches += 1
         stat_c[int(t[op, _TC_CLS])] += issue
         stat_i[int(t[op, _TC_CLS])] += 1
+        if not scalar:
+            act = act_lut.get(tsc)
+            if act is None:
+                act = act_lut[tsc] = int(
+                    _tsc_static(cfg, tsc, threads)[1].sum())
+            lane_offered += threads
+            lane_active += act
 
         if validate:
             rows = [hz[_gidx(ra, R + 2)], hz[_gidx(rb, R + 2)],
@@ -612,6 +668,7 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
                 lctr[lsp - 1] = ltop - 1
             if ltop > 0:
                 pc = imm
+                backedges += 1
             else:
                 lsp -= 1
                 pc += 1
@@ -641,7 +698,9 @@ def _simulate(cfg: EGPUConfig, packed: np.ndarray, prog_len: int,
         csp=_i32wrap(csp),
         stat_cycles=np.asarray([_i32wrap(v) for v in stat_c], np.int32),
         stat_instrs=np.asarray([_i32wrap(v) for v in stat_i], np.int32),
-        dispatches=dispatches, schedule=rec.schedule())
+        dispatches=dispatches, schedule=rec.schedule(),
+        backedges=backedges, lane_offered=lane_offered,
+        lane_active=lane_active)
 
 
 # ---------------------------------------------------------------------------
@@ -760,6 +819,52 @@ class CompiledProgram:
             self.switch_dispatches = self.sim.dispatches
             self._run_jit = self._build_runner()
         self._light_jit = None           # built lazily on first use
+        #: AOT-compiled light executables keyed by input shapes — split
+        #: so the fleet can attribute XLA compile time separately from
+        #: dispatch time (``FleetStats.compile_s`` vs ``wall_s``)
+        self._light_execs: dict = {}
+        self._counters = None            # EventCounters, built lazily
+
+    # ---------------------------------------------------- event counters
+    def event_counters(self):
+        """This program's per-core :class:`~repro.obs.EventCounters`,
+        baked from the path simulation (exact, free at runtime).  The
+        per-class retire/issue counts are bit-identical to the
+        interpreter's ``stat_instrs`` / ``stat_cycles``; the plan-shape
+        counters (fori vs unrolled repeats) describe the tier this
+        compile actually runs."""
+        if self._counters is None:
+            from ..obs.counters import EventCounters
+            sim = self.sim
+            f = self.tier_features
+            if self.mode == "superblock" and self.schedule is not None:
+                rep_trips = _sched_rep_trips(self.schedule)
+                rep_execd = _sched_rep_execd(self.schedule)
+                fori_trips = sum(f["fori_trips"])
+                plan = dict(
+                    fori_reps=f["fori_reps"],
+                    unrolled_reps=f["unrolled_reps"],
+                    fori_trips=fori_trips,
+                    unrolled_trips=rep_trips - fori_trips,
+                    fori_instrs=f["fori_execd"],
+                    unrolled_instrs=rep_execd - f["fori_execd"])
+            else:
+                plan = dict(fori_reps=0, unrolled_reps=0, fori_trips=0,
+                            unrolled_trips=0, fori_instrs=0,
+                            unrolled_instrs=0)
+            nopc = int(isa.OpClass.NOPC)
+            self._counters = EventCounters(
+                instrs=int(sim.steps), cycles=int(sim.cycles),
+                instrs_by_class=tuple(int(v) for v in sim.stat_instrs),
+                cycles_by_class=tuple(int(v) for v in sim.stat_cycles),
+                loop_backedges=int(sim.backedges),
+                block_dispatches=int(self.switch_dispatches),
+                hazard_nop_instrs=int(sim.stat_instrs[nopc]),
+                hazard_nop_cycles=int(sim.stat_cycles[nopc]),
+                hazard_violations=int(sim.violations),
+                lane_steps_offered=int(sim.lane_offered),
+                lane_steps_active=int(sim.lane_active), **plan)
+        return self._counters
 
     # ----------------------------------------------------- shared data op
     def _apply_row(self, row, regs, shared, pstack, pdepth, pok, tdx_dim):
@@ -1107,8 +1212,9 @@ class CompiledProgram:
         if shared_init is not None:
             buf = machine_mod.pack_shared_init(shared_init, S)
             shared[:buf.size] = buf
-        out = self._run_jit(jnp.asarray(shared), jnp.int32(tdx_dim))
-        out.cycles.block_until_ready()
+        with obs_trace.span("run_compiled", tier=self.mode):
+            out = self._run_jit(jnp.asarray(shared), jnp.int32(tdx_dim))
+            out.cycles.block_until_ready()
         return out
 
     def run_batch(self, shared_inits: list, tdx_dims) -> MachineState:
@@ -1122,21 +1228,49 @@ class CompiledProgram:
                 continue
             buf = machine_mod.pack_shared_init(s0, S)
             shared[i, :buf.size] = buf
-        out = self._run_jit(jnp.asarray(shared),
-                            jnp.asarray(tdx_dims, _I32))
-        out.cycles.block_until_ready()
+        with obs_trace.span("run_compiled", tier=self.mode,
+                            batch=len(shared_inits)):
+            out = self._run_jit(jnp.asarray(shared),
+                                jnp.asarray(tdx_dims, _I32))
+            out.cycles.block_until_ready()
         return out
 
     # -------------------------------------------------------- light path
+    def light_compile(self, shared, tdx_dim) -> float:
+        """Ensure the light-path executable for these input shapes is
+        built and XLA-compiled ahead of time; returns the host seconds
+        that took (0.0 when already compiled).  The fleet calls this
+        before its timed dispatch so ``FleetStats.compile_s`` carries
+        the one-time compile cost instead of ``wall_s``."""
+        shared = jnp.asarray(shared, _U32)
+        tdx_dim = jnp.asarray(tdx_dim, _I32)
+        key = (np.shape(shared), np.shape(tdx_dim))
+        if key in self._light_execs:
+            return 0.0
+        t0 = time.perf_counter()
+        with obs_trace.span("compile", kind="xla_light", tier=self.mode,
+                            batch=key[0][:-1]):
+            if self._light_jit is None:
+                self._light_jit = self._build_light_runner()
+            self._light_execs[key] = \
+                self._light_jit.lower(shared, tdx_dim).compile()
+        return time.perf_counter() - t0
+
     def run_light_dev(self, shared, tdx_dim):
         """Raw light entry: device (or host) arrays in — ``(..., S)``
         uint32 shared image, ``(...,)``/scalar int32 TDX — device arrays
         ``(shared, cycles, halted)`` out.  No host sync, no donation:
         the same input buffer can be replayed across calls, which is
-        what keeps the fleet's residency cache sound."""
-        if self._light_jit is None:
-            self._light_jit = self._build_light_runner()
-        return self._light_jit(shared, tdx_dim)
+        what keeps the fleet's residency cache sound.  Dispatches the
+        shape-keyed AOT executable (see :meth:`light_compile`)."""
+        shared = jnp.asarray(shared, _U32)
+        tdx_dim = jnp.asarray(tdx_dim, _I32)
+        key = (np.shape(shared), np.shape(tdx_dim))
+        exe = self._light_execs.get(key)
+        if exe is None:
+            self.light_compile(shared, tdx_dim)
+            exe = self._light_execs[key]
+        return exe(shared, tdx_dim)
 
     def run_light(self, *, shared_init=None, tdx_dim: int = 16):
         """Execute one core, returning only ``(shared, cycles, halted)``
@@ -1231,14 +1365,21 @@ def compile_program(image: ProgramImage, threads: int | None = None, *,
     key = (image.cfg, program_key(image), threads, validate, mode, pol,
            hint)
     hit = _CACHE.pop(key, None)          # pop + reinsert = move-to-end
-    if hit is None:
-        while len(_CACHE) >= _CACHE_MAX:
-            _CACHE.pop(next(iter(_CACHE)))     # oldest entry first (LRU)
-        try:
-            hit = CompiledProgram(image, threads, validate=validate,
-                                  mode=mode, policy=pol, batch_hint=hint)
-        except BlockCompileError as e:
-            hit = e                      # negative-cache the rejection
+    with obs_trace.span("compile", cache_hit=hit is not None,
+                        mode=mode, threads=threads) as sp:
+        if hit is None:
+            while len(_CACHE) >= _CACHE_MAX:
+                _CACHE.pop(next(iter(_CACHE)))   # oldest entry first (LRU)
+            try:
+                hit = CompiledProgram(image, threads, validate=validate,
+                                      mode=mode, policy=pol,
+                                      batch_hint=hint)
+            except BlockCompileError as e:
+                hit = e                  # negative-cache the rejection
+        if sp.active:
+            sp.set(program=hashlib.blake2b(
+                       key[1], digest_size=4).hexdigest(),
+                   tier=getattr(hit, "mode", "rejected"))
     _CACHE[key] = hit
     if isinstance(hit, BlockCompileError):
         raise hit

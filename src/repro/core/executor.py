@@ -36,6 +36,7 @@ from .assembler import ProgramImage
 from .config import EGPUConfig
 from .isa import Op, Typ
 from .machine import MachineState, init_state
+from ..obs import trace as obs_trace
 
 _I32 = jnp.int32
 _U32 = jnp.uint32
@@ -435,6 +436,7 @@ def run_program(image: ProgramImage, state: MachineState | None = None, *,
         state = init_state(cfg, **init_kw)
     packed, length = pad_image(image)
     runner = _make_runner(cfg, length, image_ops(image), validate)
-    out = runner(jnp.asarray(packed), state)
-    out.cycles.block_until_ready()
+    with obs_trace.span("interpret", prog_len=length):
+        out = runner(jnp.asarray(packed), state)
+        out.cycles.block_until_ready()
     return out

@@ -16,6 +16,7 @@ from typing import Any
 from ..core.assembler import ProgramImage
 from ..core.blockc import TierPolicy
 from ..core.config import EGPUConfig
+from ..obs import trace as obs_trace
 from .scheduler import FleetScheduler, FleetStats, JobResult
 
 
@@ -33,20 +34,29 @@ class Fleet:
     inputs stay device-resident across drains — repeat drains of the
     same program over the same inputs pay zero host->device transfer
     (``stats.residency_hits``).
+
+    ``trace=True`` records every drain (spans, per-job latency, event
+    counters, tier decisions) into ``fleet.tracer``; a path string
+    additionally writes the cumulative Chrome/Perfetto trace JSON there
+    after each drain (``python -m repro.obs.report <path>`` summarizes
+    it).  Tracing never changes results — they stay bit-identical —
+    and costs nothing when off.
     """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
                  pack_by_cost: bool = True, validate: bool = True,
                  use_compiler: bool = True, compile_min: int = 2,
                  tier_policy: TierPolicy | None = None,
-                 residency_max: int = 32):
+                 residency_max: int = 32,
+                 trace: bool | str | obs_trace.Tracer | None = None):
         self._sched = FleetScheduler(cfg, batch_size,
                                      pack_by_cost=pack_by_cost,
                                      validate=validate,
                                      use_compiler=use_compiler,
                                      compile_min=compile_min,
                                      tier_policy=tier_policy,
-                                     residency_max=residency_max)
+                                     residency_max=residency_max,
+                                     trace=trace)
 
     @property
     def cfg(self) -> EGPUConfig:
@@ -63,6 +73,17 @@ class Fleet:
     @property
     def stats(self) -> FleetStats:
         return self._sched.stats
+
+    @property
+    def tracer(self) -> obs_trace.Tracer | None:
+        """The fleet's own tracer (``trace=`` knob), or ``None``."""
+        return self._sched.tracer
+
+    def save_trace(self, path: str) -> None:
+        """Write the fleet tracer's Chrome/Perfetto trace JSON."""
+        if self._sched.tracer is None:
+            raise ValueError("fleet was created without trace=")
+        self._sched.tracer.save(path)
 
     def submit(self, image: ProgramImage, shared_init=None, *,
                threads: int | None = None, tdx_dim: int = 16,

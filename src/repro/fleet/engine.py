@@ -25,6 +25,7 @@ slowest op on the CPU backend by an order of magnitude.
 from __future__ import annotations
 
 import functools
+import time
 import weakref
 from collections import OrderedDict
 
@@ -39,6 +40,7 @@ from ..core.config import EGPUConfig
 from ..core.executor import make_step, pad_image, padded_length
 from ..core.isa import Op
 from ..core.machine import MachineState, init_state
+from ..obs import trace as obs_trace
 
 
 class ResidencyCache:
@@ -168,11 +170,38 @@ def _pack_programs(images: list[ProgramImage], prog_len: int | None = None):
     return jnp.asarray(packed), prog_len, ops
 
 
+#: AOT-compiled fleet executables keyed on (runner, batch shape): the
+#: jit wrapper would fold XLA compilation into the first dispatch, which
+#: makes the scheduler's wall-time attribution lie — ``lower().compile()``
+#: splits it out (``timings["compile_s"]``) without an extra execution.
+_FLEET_EXECS: OrderedDict = OrderedDict()
+_FLEET_EXECS_MAX = 64
+
+
+def _fleet_exec(runner, progs, states):
+    """The AOT executable for this (runner, shapes), plus the host
+    seconds spent compiling it now (0.0 on a cache hit)."""
+    key = (runner, progs.shape)
+    exe = _FLEET_EXECS.get(key)
+    if exe is not None:
+        _FLEET_EXECS.move_to_end(key)
+        return exe, 0.0
+    t0 = time.perf_counter()
+    with obs_trace.span("compile", kind="fleet_runner",
+                        batch=progs.shape[0], prog_len=progs.shape[1]):
+        exe = runner.lower(progs, states).compile()
+    _FLEET_EXECS[key] = exe
+    while len(_FLEET_EXECS) > _FLEET_EXECS_MAX:
+        _FLEET_EXECS.popitem(last=False)
+    return exe, time.perf_counter() - t0
+
+
 def fleet_run(images: list[ProgramImage],
               states: list[MachineState] | MachineState | None = None, *,
               prog_len: int | None = None,
               init_kw: list[dict] | None = None,
-              validate: bool = True) -> MachineState:
+              validate: bool = True,
+              timings: dict | None = None) -> MachineState:
     """Execute one program per core, all cores in one vmapped dispatch.
 
     ``images`` must share a configuration (homogeneous cores).  ``states``
@@ -185,6 +214,11 @@ def fleet_run(images: list[ProgramImage],
     ``validate=False`` drops the hazard checker and the instruction-mix
     counters from the compiled step (architectural results unchanged) —
     use for throughput runs.
+
+    ``timings``, if given, receives ``{"compile_s": ...}`` — the host
+    seconds spent XLA-compiling the runner for this batch shape during
+    *this* call (0.0 when warm), so callers timing the dispatch can
+    attribute one-time compile cost separately.
     """
     if not images:
         raise ValueError("empty fleet")
@@ -202,6 +236,11 @@ def fleet_run(images: list[ProgramImage],
         states = stack_states(states)
     progs, length, ops = _pack_programs(images, prog_len)
     runner = _make_fleet_runner(cfg, length, ops, validate=validate)
-    out = runner(progs, states)
-    out.cycles.block_until_ready()
+    exe, compile_s = _fleet_exec(runner, progs, states)
+    if timings is not None:
+        timings["compile_s"] = compile_s
+    with obs_trace.span("dispatch", cores=len(images), prog_len=length):
+        out = exe(progs, states)
+    with obs_trace.span("device_sync"):
+        out.cycles.block_until_ready()
     return out

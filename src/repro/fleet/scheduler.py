@@ -41,6 +41,9 @@ from ..core.blockc import (BlockCompileError, TierPolicy, compile_program,
 from ..core.config import EGPUConfig
 from ..core.executor import padded_length
 from ..core.machine import MachineState
+from ..obs import counters as obs_counters
+from ..obs import trace as obs_trace
+from ..obs.counters import EventCounters
 from .engine import ResidencyCache, fleet_run
 
 
@@ -78,6 +81,11 @@ class JobResult:
     shared: np.ndarray               # (S,) uint32
     stat_cycles: np.ndarray          # (NUM_OP_CLASSES,) int32
     stat_instrs: np.ndarray
+    #: execution tier that ran the job ("interp"/"blocks"/"superblock")
+    tier: str = "interp"
+    #: baked per-core event counters (compiled tiers always; interpreter
+    #: tier only under tracing — they cost a host-side path walk there)
+    counters: EventCounters | None = None
 
     def shared_u32(self) -> np.ndarray:
         return self.shared
@@ -102,7 +110,13 @@ class FleetStats:
     pad_slots: int = 0
     total_cycles: int = 0
     total_steps: int = 0
+    #: wall time of batch *execution* (input build + dispatch + sync +
+    #: collect); one-time compile cost is split into ``compile_s``
     wall_s: float = 0.0
+    #: host/XLA compile seconds (block compiles, light-path and fleet
+    #: runner XLA compiles) — kept out of ``wall_s`` so warm-vs-cold
+    #: throughput comparisons measure execution, not compilation
+    compile_s: float = 0.0
     compiled_jobs: int = 0       # jobs run on either compiled tier
     compiled_batches: int = 0
     superblock_jobs: int = 0     # ... of which on the superblock tier
@@ -198,9 +212,24 @@ class FleetScheduler:
                  pack_by_cost: bool = True, validate: bool = True,
                  use_compiler: bool = True, compile_min: int = 2,
                  tier_policy: TierPolicy | None = None,
-                 residency_max: int = 32):
+                 residency_max: int = 32,
+                 trace: bool | str | obs_trace.Tracer | None = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        #: ``trace=True`` records every drain into ``self.tracer``;
+        #: a path string additionally writes the cumulative trace JSON
+        #: after each successful drain; a :class:`~repro.obs.Tracer`
+        #: instance records into that tracer.  An ambient tracer
+        #: (``with Tracer():`` around ``drain()``) works regardless.
+        self.tracer: obs_trace.Tracer | None = None
+        self._trace_path: str | None = None
+        if isinstance(trace, obs_trace.Tracer):
+            self.tracer = trace
+        elif isinstance(trace, str):
+            self.tracer = obs_trace.Tracer("fleet")
+            self._trace_path = trace
+        elif trace:
+            self.tracer = obs_trace.Tracer("fleet")
         self.cfg = cfg
         self.batch_size = batch_size
         self.pack_by_cost = pack_by_cost
@@ -240,7 +269,17 @@ class FleetScheduler:
             shared_init=None if shared_init is None
             else np.asarray(shared_init),
             threads=threads, tdx_dim=tdx_dim, tag=tag, weight=weight))
+        tr = self._trace()
+        if tr is not None:              # open the submit->deliver pair
+            tr.async_begin("job", id=handle, prog_len=image.n,
+                           threads=threads)
         return handle
+
+    def _trace(self) -> obs_trace.Tracer | None:
+        """The ambient tracer if one is installed, else the fleet's own
+        (``trace=`` knob) — ``None`` disables all per-job recording."""
+        tr = obs_trace.current_tracer()
+        return tr if tr is not None else self.tracer
 
     @property
     def pending(self) -> int:
@@ -276,20 +315,31 @@ class FleetScheduler:
             if len(group) < self.compile_min:
                 rest.extend(group)
                 continue
+            # the tier policy sees the width the group will actually
+            # run at (its dominant pow2-bucketed chunk size): wide
+            # lock-step batches amortize driver overhead differently
+            # than single cores, and the cost model knows it
+            hint = self._bucket(min(len(group), self.batch_size),
+                                self.batch_size)
+            t0 = time.perf_counter()
             try:
-                # the tier policy sees the width the group will actually
-                # run at (its dominant pow2-bucketed chunk size): wide
-                # lock-step batches amortize driver overhead differently
-                # than single cores, and the cost model knows it
-                hint = self._bucket(min(len(group), self.batch_size),
-                                    self.batch_size)
                 cp = compile_program(group[0].image, group[0].threads,
                                      validate=self.validate,
                                      policy=self.tier_policy,
                                      batch_hint=hint)
             except BlockCompileError:
+                self.stats.compile_s += time.perf_counter() - t0
                 rest.extend(group)
                 continue
+            self.stats.compile_s += time.perf_counter() - t0
+            tr = self._trace()
+            if tr is not None:
+                tr.event("tier_group",
+                         program=hashlib.blake2b(
+                             program_key(cp.image),
+                             digest_size=4).hexdigest(),
+                         jobs=len(group), threads=cp.threads,
+                         batch_hint=hint, tier=cp.mode)
             compiled.append((cp, group))
         return compiled, rest
 
@@ -307,17 +357,36 @@ class FleetScheduler:
         self.stats.batches += 1
         self.stats.pad_slots += len(batch) - real
         self.stats.wall_s += wall
+        tr = self._trace()
         for i, job in enumerate(batch[:real]):
             res = JobResult(
                 handle=job.handle, tag=job.tag, cycles=int(cycles[i]),
                 steps=int(steps[i]),
                 time_us=self.cfg.cycles_to_us(int(cycles[i])),
                 hazard_violations=int(hv[i]), shared=shared[i],
-                stat_cycles=stat_c[i], stat_instrs=stat_i[i])
+                stat_cycles=stat_c[i], stat_instrs=stat_i[i],
+                tier="interp")
+            if tr is not None:
+                res.counters = self._job_counters(job)
+                tr.async_end("job", id=job.handle, cycles=res.cycles,
+                             tier="interp")
             results[job.handle] = res
             self.stats.jobs += 1
             self.stats.total_cycles += res.cycles
             self.stats.total_steps += res.steps
+
+    def _job_counters(self, job: FleetJob) -> EventCounters | None:
+        """Event counters for an interpreter-tier job (tracing only):
+        the path simulation is tier-independent, so compile the program
+        (block-compile cache, no XLA work) purely for its counters —
+        ``None`` when the compiler rejects it."""
+        try:
+            cp = compile_program(job.image, job.threads,
+                                 validate=self.validate,
+                                 policy=self.tier_policy)
+        except BlockCompileError:
+            return None
+        return cp.event_counters()
 
     @staticmethod
     def _bucket(n: int, cap: int) -> int:
@@ -394,11 +463,17 @@ class FleetScheduler:
         self.stats.batches += 1
         self.stats.pad_slots += len(batch) - real
         self.stats.wall_s += wall
+        counters = cp.event_counters()   # baked once, shared per program
+        tr = self._trace()
         for i, job in enumerate(batch[:real]):
             results[job.handle] = JobResult(
                 handle=job.handle, tag=job.tag, cycles=cycles,
                 steps=steps, time_us=time_us, hazard_violations=hv,
-                shared=shared[i], stat_cycles=stat_c, stat_instrs=stat_i)
+                shared=shared[i], stat_cycles=stat_c, stat_instrs=stat_i,
+                tier=cp.mode, counters=counters)
+            if tr is not None:
+                tr.async_end("job", id=job.handle, cycles=cycles,
+                             tier=cp.mode)
             self.stats.jobs += 1
             self.stats.total_cycles += cycles
             self.stats.total_steps += steps
@@ -408,33 +483,52 @@ class FleetScheduler:
         """One compiled-tier batch: pow2-bucketed, same-program padded,
         run through the light path over device-resident inputs."""
         real = len(chunk)
-        size = self._bucket(real, self.batch_size)
-        pad = size - real
-        chunk = chunk + chunk[:1] * pad           # same-program filler
-        t0 = time.perf_counter()
-        shared_dev, tdx_dev = self._resident_inputs(cp, chunk)
-        shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev)
-        shared_out.block_until_ready()
-        wall = time.perf_counter() - t0
-        self._collect_light(cp, shared_out, chunk, real, wall, results)
-        self.stats.compiled_jobs += real
-        self.stats.compiled_batches += 1
-        if cp.mode == "superblock":
-            self.stats.superblock_jobs += real
-            self.stats.superblock_batches += 1
+        with obs_trace.span("batch", tier=cp.mode, jobs=real):
+            with obs_trace.span("bucket"):
+                size = self._bucket(real, self.batch_size)
+                pad = size - real
+                chunk = chunk + chunk[:1] * pad   # same-program filler
+            t0 = time.perf_counter()
+            hits0 = self.stats.residency_hits
+            with obs_trace.span("residency") as rsp:
+                shared_dev, tdx_dev = self._resident_inputs(cp, chunk)
+            if rsp.active:
+                rsp.set(hit=self.stats.residency_hits > hits0)
+            # split one-time XLA compilation out of the timed dispatch
+            compile_s = cp.light_compile(shared_dev, tdx_dev)
+            self.stats.compile_s += compile_s
+            with obs_trace.span("dispatch", cores=size):
+                shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev)
+            with obs_trace.span("device_sync"):
+                shared_out.block_until_ready()
+            wall = time.perf_counter() - t0 - compile_s
+            with obs_trace.span("collect"):
+                self._collect_light(cp, shared_out, chunk, real, wall,
+                                    results)
+            self.stats.compiled_jobs += real
+            self.stats.compiled_batches += 1
+            if cp.mode == "superblock":
+                self.stats.superblock_jobs += real
+                self.stats.superblock_batches += 1
 
     def _run_interp_unit(self, batch: list[FleetJob],
                          results: dict[int, JobResult]) -> None:
         """One interpreter-tier batch: padded with STOP filler jobs."""
         real = len(batch)
-        pad = self.batch_size - real
-        batch = batch + [self._filler()] * pad
-        t0 = time.perf_counter()
-        final = fleet_run([j.image for j in batch],
-                          _batch_init_state(self.cfg, batch),
-                          validate=self.validate)
-        wall = time.perf_counter() - t0
-        self._collect(final, batch, real, wall, results)
+        with obs_trace.span("batch", tier="interp", jobs=real):
+            pad = self.batch_size - real
+            batch = batch + [self._filler()] * pad
+            t0 = time.perf_counter()
+            with obs_trace.span("pack"):
+                states = _batch_init_state(self.cfg, batch)
+            timings: dict = {}
+            final = fleet_run([j.image for j in batch], states,
+                              validate=self.validate, timings=timings)
+            # one-time XLA compile cost, split out of execution wall
+            self.stats.compile_s += timings["compile_s"]
+            wall = time.perf_counter() - t0 - timings["compile_s"]
+            with obs_trace.span("collect"):
+                self._collect(final, batch, real, wall, results)
 
     def drain(self) -> dict[int, JobResult]:
         """Run every queued job; returns ``{handle: JobResult}``.
@@ -446,6 +540,15 @@ class FleetScheduler:
         by the next successful ``drain()`` — a failed drain loses no
         work, computed or queued.
         """
+        if self.tracer is None:
+            return self._drain()
+        with self.tracer:                # install for nested spans
+            out = self._drain()
+        if self._trace_path is not None:
+            self.tracer.save(self._trace_path)
+        return out
+
+    def _drain(self) -> dict[int, JobResult]:
         results: dict[int, JobResult] = dict(self._salvaged)
         n_salvaged = len(results)        # counted only on delivery
         self._salvaged = {}
@@ -454,36 +557,54 @@ class FleetScheduler:
         units: list[tuple] | None = None
         idx = 0
 
-        try:
-            jobs = all_jobs
-            compiled_groups: list = []
-            if self.use_compiler:
-                compiled_groups, jobs = self._split_compilable(jobs)
+        with obs_trace.span("drain", jobs=len(all_jobs)) as dsp:
+            try:
+                jobs = all_jobs
+                compiled_groups: list = []
+                if self.use_compiler:
+                    with obs_trace.span("partition", jobs=len(all_jobs)):
+                        compiled_groups, jobs = \
+                            self._split_compilable(jobs)
 
-            # units hold *real* jobs only (padding happens at run time),
-            # so the units not yet collected are exactly what a failure
-            # must put back on the queue.
-            units = []
-            for cp, group in compiled_groups:
-                for i in range(0, len(group), self.batch_size):
-                    units.append((cp, group[i:i + self.batch_size]))
-            units.extend((None, batch) for batch in self._batches(jobs))
+                # units hold *real* jobs only (padding happens at run
+                # time), so the units not yet collected are exactly what
+                # a failure must put back on the queue.
+                with obs_trace.span("bucket"):
+                    units = []
+                    for cp, group in compiled_groups:
+                        for i in range(0, len(group), self.batch_size):
+                            units.append(
+                                (cp, group[i:i + self.batch_size]))
+                    units.extend((None, batch)
+                                 for batch in self._batches(jobs))
 
-            for idx, (cp, unit_jobs) in enumerate(units):
-                if cp is not None:
-                    self._run_compiled_unit(cp, unit_jobs, results)
+                for idx, (cp, unit_jobs) in enumerate(units):
+                    if cp is not None:
+                        self._run_compiled_unit(cp, unit_jobs, results)
+                    else:
+                        self._run_interp_unit(unit_jobs, results)
+            except BaseException:
+                if units is None:            # failed while partitioning
+                    unprocessed = list(all_jobs)
                 else:
-                    self._run_interp_unit(unit_jobs, results)
-        except BaseException:
-            if units is None:                  # failed while partitioning
-                unprocessed = list(all_jobs)
-            else:
-                unprocessed = [j for _, us in units[idx:] for j in us
-                               if j.handle not in results]
-            unprocessed.sort(key=lambda j: j.handle)
-            self._queue = unprocessed + self._queue
-            self._salvaged = results           # deliver on the next drain
-            raise
+                    unprocessed = [j for _, us in units[idx:] for j in us
+                                   if j.handle not in results]
+                unprocessed.sort(key=lambda j: j.handle)
+                self._queue = unprocessed + self._queue
+                self._salvaged = results     # deliver on the next drain
+                raise
+
+            tr = obs_trace.current_tracer()
+            if tr is not None:           # per-drain counter rollup
+                agg = obs_counters.aggregate(
+                    r.counters for r in results.values())
+                if agg is not None:
+                    flat = agg.flat()
+                    tr.event("drain_counters", **flat)
+                    tr.add_counters(flat)
+                if dsp.active:
+                    dsp.set(delivered=len(results),
+                            batches=len(units))
         # salvaged results were computed (and counted into jobs/wall_s/
         # tier splits) by the drain that ran them; delivery only marks
         # them so per-drain consumers don't double-dip the timing

@@ -1,0 +1,15 @@
+"""Observability for the soft-GPU stack: tracing, event counters,
+tier-decision logging, and a Chrome/Perfetto trace exporter.
+
+Zero overhead when disabled; results are bit-identical with tracing on
+or off.  See :mod:`repro.obs.trace` for the span API,
+:mod:`repro.obs.counters` for the counter definitions, and
+``python -m repro.obs.report trace.json`` for the offline summarizer.
+"""
+from .trace import NULL_SPAN, Tracer, current_tracer, event, span
+from .counters import EventCounters, aggregate
+
+__all__ = [
+    "Tracer", "span", "event", "current_tracer", "NULL_SPAN",
+    "EventCounters", "aggregate",
+]

@@ -1,0 +1,270 @@
+"""Observability tests: tracing, event counters, and the exporter.
+
+The contracts under test:
+
+* **zero-overhead-off** — with no active tracer, every instrumentation
+  site is one contextvar read returning the shared no-op span; nothing
+  is allocated, nothing recorded;
+* **bit-identity** — tracing on vs off changes NOTHING about results,
+  on all three tiers and through the fleet scheduler;
+* **exact counters** — the host-side baked :class:`EventCounters` match
+  the interpreter's dynamic ``stat_instrs`` / ``stat_cycles`` profile
+  bit-for-bit, and the derived counters (back-edges, lane-steps) match
+  first-principles expectations;
+* **schema** — the exporter emits Chrome/Perfetto trace-event JSON the
+  report CLI can parse back into a span tree that accounts for the
+  drain's wall time, with balanced per-job async pairs.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Asm, EGPUConfig, compile_program, run_compiled, \
+    run_program
+from repro.core import machine as machine_mod
+from repro.core.isa import NUM_OP_CLASSES, OpClass
+from repro.fleet import Fleet
+from repro.obs import NULL_SPAN, Tracer, aggregate, current_tracer, span
+from repro.obs import report as report_mod
+from repro.programs import build_matmul, build_reduction, build_transpose
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+
+def _loop_program(iters: int, threads: int = 32):
+    """One LOOP back-edge per iteration (saxpy over shared memory)."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    a.lod(3, 1, 32)
+    with a.loop(iters):
+        a.fmul(3, 3, 4)
+        a.fadd(3, 3, 2)
+    a.sto(3, 1, 32)
+    a.stop()
+    data = np.arange(64, dtype=np.float32) / 7.0
+    return a.assemble(threads_active=threads), data
+
+
+def _suite():
+    return [build_reduction(CFG, 32), build_reduction(CFG, 32, use_dot=True),
+            build_transpose(CFG, 16), build_matmul(CFG, 8)]
+
+
+# ------------------------------------------------------------------
+# disabled path
+# ------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop():
+    assert current_tracer() is None
+    sp = span("anything", key="value")
+    assert sp is NULL_SPAN and sp.active is False
+    with sp as inner:
+        inner.set(ignored=1)            # must be a no-op, not a crash
+    assert span("again") is NULL_SPAN   # no allocation per call site
+
+
+def test_tracer_scoping_restores_contextvar():
+    tr = Tracer("t")
+    with tr:
+        assert current_tracer() is tr
+        with Tracer("nested") as tr2:
+            assert current_tracer() is tr2
+        assert current_tracer() is tr
+    assert current_tracer() is None
+
+
+# ------------------------------------------------------------------
+# bit-identity, all tiers
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["blocks", "superblock"])
+def test_compiled_tiers_bit_identical_under_tracing(mode):
+    image, data = _loop_program(40)
+    cp = compile_program(image, mode=mode)
+    ref = cp.run(shared_init=data, tdx_dim=32)
+    with Tracer("t"):
+        got = cp.run(shared_init=data, tdx_dim=32)
+    for leaf in ref._fields:
+        assert np.array_equal(np.asarray(getattr(ref, leaf)),
+                              np.asarray(getattr(got, leaf))), leaf
+
+
+def test_interpreter_bit_identical_under_tracing():
+    b = _suite()[0]
+    ref = run_program(b.image, shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    with Tracer("t"):
+        got = run_program(b.image, shared_init=b.shared_init,
+                          tdx_dim=b.tdx_dim)
+    for leaf in ref._fields:
+        assert np.array_equal(np.asarray(getattr(ref, leaf)),
+                              np.asarray(getattr(got, leaf))), leaf
+
+
+def test_fleet_drain_bit_identical_under_tracing():
+    def drain(trace):
+        fleet = Fleet(CFG, batch_size=8, trace=trace)
+        hs = [fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+              for b in _suite() * 2]
+        res = fleet.drain()
+        return [res[h] for h in hs]
+
+    for r0, r1 in zip(drain(False), drain(True)):
+        assert np.array_equal(r0.shared_u32(), r1.shared_u32())
+        assert r0.cycles == r1.cycles
+        assert r0.profile() == r1.profile()
+
+
+# ------------------------------------------------------------------
+# event counters
+# ------------------------------------------------------------------
+
+def test_counters_match_interpreter_profile():
+    """The host-baked per-class counters are bit-identical to the
+    interpreter's dynamically-accumulated Fig.-6 profile."""
+    for b in _suite():
+        ec = compile_program(b.image).event_counters()
+        st = run_program(b.image, shared_init=b.shared_init,
+                         tdx_dim=b.tdx_dim)
+        assert ec.instrs_by_class == tuple(
+            int(x) for x in np.asarray(st.stat_instrs)), b.name
+        assert ec.cycles_by_class == tuple(
+            int(x) for x in np.asarray(st.stat_cycles)), b.name
+        assert ec.cycles == int(st.cycles), b.name
+        assert ec.instrs == sum(ec.instrs_by_class)
+
+
+def test_counters_backedges_and_hazards():
+    image, _ = _loop_program(23)
+    ec = compile_program(image).event_counters()
+    # the final trip falls through instead of jumping back
+    assert ec.loop_backedges == 22
+    assert len(ec.instrs_by_class) == NUM_OP_CLASSES
+    # NOP padding is exactly the hazard-stall class
+    assert ec.hazard_nop_instrs == ec.instrs_by_class[OpClass.NOPC]
+    assert ec.flat()["instrs.NOPC"] == ec.hazard_nop_instrs
+
+
+def test_counters_lane_utilization_full_warp():
+    """An unpredicated program at full thread count offers and retires
+    every lane-step: utilization exactly 1.0."""
+    image, _ = _loop_program(8, threads=32)
+    ec = compile_program(image).event_counters()
+    assert ec.lane_steps_offered > 0
+    assert ec.lane_steps_active == ec.lane_steps_offered
+    assert ec.lane_utilization == 1.0
+
+
+def test_counters_aggregate():
+    ecs = [compile_program(b.image).event_counters() for b in _suite()]
+    agg = aggregate(ecs)
+    assert agg.instrs == sum(e.instrs for e in ecs)
+    assert agg.loop_backedges == sum(e.loop_backedges for e in ecs)
+    assert aggregate([None, None]) is None
+    assert aggregate([ecs[0], None]).instrs == ecs[0].instrs
+
+
+def test_fleet_results_carry_tier_and_counters():
+    fleet = Fleet(CFG, batch_size=8, trace=True)
+    b = build_matmul(CFG, 8)
+    hs = [fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+          for _ in range(8)]
+    res = fleet.drain()
+    for h in hs:
+        assert res[h].tier in ("blocks", "superblock")
+        assert res[h].counters is not None
+    # per-job counters agree with the interpreter run of the same job
+    st = run_program(b.image, shared_init=b.shared_init, tdx_dim=b.tdx_dim)
+    ec = res[hs[0]].counters
+    assert ec.instrs_by_class == tuple(
+        int(x) for x in np.asarray(st.stat_instrs))
+
+
+# ------------------------------------------------------------------
+# trace schema + report round-trip
+# ------------------------------------------------------------------
+
+def _traced_drain(jobs, batch=8):
+    fleet = Fleet(CFG, batch_size=batch, trace=True)
+    for b in jobs:
+        fleet.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+    fleet.drain()
+    return fleet.tracer
+
+
+def test_trace_schema_and_span_tree(tmp_path):
+    tracer = _traced_drain(_suite() * 2)
+    out = tmp_path / "trace.json"
+    tracer.save(str(out))
+
+    events = report_mod.load(str(out))
+    assert isinstance(events, list) and events
+    xs = [e for e in events if e.get("ph") == "X"]
+    names = {e["name"] for e in xs}
+    assert {"drain", "partition", "bucket", "collect"} <= names
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        json.dumps(e)                     # strictly JSON-serializable
+
+    roots = report_mod.build_tree(events)
+    fracs = report_mod.coverage(roots, name="drain")
+    assert fracs and min(fracs) >= 0.85   # bench gate holds the real bar
+
+    # per-job async pairs are balanced and non-negative
+    lats = report_mod.job_latencies(events)
+    assert len(lats) == len(_suite() * 2)
+    assert all(v >= 0 for v in lats.values())
+
+
+def test_trace_records_tier_decisions_and_counters():
+    # an iteration count no other test uses: the decision is only logged
+    # on a compile-cache MISS (a hit never re-runs the TierPolicy)
+    image, data = _loop_program(347)
+    jobs = [(image, data)] * 8
+    fleet = Fleet(CFG, batch_size=8, trace=True)
+    for im, d in jobs:
+        fleet.submit(im, d, tdx_dim=32)
+    fleet.drain()
+    events = fleet.tracer.to_chrome()["traceEvents"]
+    decisions = report_mod.tier_decisions(events)
+    assert decisions, "drain must log TierPolicy decisions"
+    for d in decisions:
+        assert d["tier"] in ("blocks", "superblock")
+        assert "rule" in d and "features" in d
+    totals = report_mod.counter_totals(events)
+    assert totals and totals["instrs"] > 0
+
+
+def test_report_cli_renders(tmp_path, capsys):
+    tracer = _traced_drain(_suite())
+    out = tmp_path / "trace.json"
+    tracer.save(str(out))
+    assert report_mod.main([str(out)]) == 0
+    text = capsys.readouterr().out
+    assert "drain" in text and "instrs" in text
+
+
+# ------------------------------------------------------------------
+# compile-time attribution
+# ------------------------------------------------------------------
+
+def test_fleet_stats_split_compile_from_wall():
+    """A cold drain's XLA compile seconds land in ``compile_s``, not
+    ``wall_s``; a warm repeat drain pays (almost) none of it."""
+    image, data = _loop_program(501)      # unlikely-iters => cold compile
+    fleet = Fleet(CFG, batch_size=4)
+    for _ in range(4):
+        fleet.submit(image, data, tdx_dim=32)
+    fleet.drain()
+    cold = fleet.stats.compile_s
+    assert cold > 0.0
+    assert fleet.stats.wall_s >= 0.0
+
+    for _ in range(4):
+        fleet.submit(image, data, tdx_dim=32)
+    fleet.drain()
+    warm = fleet.stats.compile_s - cold
+    assert warm < cold / 10               # caches absorbed the compile
