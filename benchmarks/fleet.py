@@ -27,7 +27,7 @@ sys.path.insert(0, os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
 from repro.core import EGPUConfig, run_program  # noqa: E402
-from repro.fleet import Fleet  # noqa: E402
+from repro.fleet import Fleet, FaultPlan, FleetService  # noqa: E402
 from repro.obs import Tracer  # noqa: E402
 from repro.programs import (build_bitonic, build_fft, build_matmul,  # noqa: E402
                             build_reduction, build_transpose)
@@ -200,6 +200,164 @@ def bench_residency(cfg, batch: int = 32, drains: int = 6) -> dict:
     }
 
 
+def _chaos_plan(seed: int = 11) -> FaultPlan:
+    """The benchmark's fixed chaos schedule — three fault kinds: tier
+    compile failure (degrades down the tier chain), dispatch exceptions
+    (bisected / retried with backoff), and one device-sync hang long
+    enough to trip the service's dispatch watchdog (timeout path)."""
+    return FaultPlan(seed=seed,
+                     compile={"p": 1.0, "count": 2},
+                     dispatch={"p": 1.0, "count": 3, "after": 2},
+                     device_sync={"p": 1.0, "count": 1, "hang_s": 1.0})
+
+
+def _serve_once(cfg, jobs, batch: int, rate: float,
+                faults: FaultPlan | None) -> dict:
+    """One open-loop serving run: submissions arrive on a fixed-rate
+    clock (independent of completions — queueing shows up as latency,
+    exactly what a closed loop would hide), every future's resolve time
+    is captured by callback, and *every* future must resolve."""
+    svc = FleetService(cfg, batch, max_delay_s=0.002, max_retries=3,
+                       backoff_s=0.002,
+                       dispatch_timeout_s=0.5 if faults else None,
+                       faults=faults)
+    n = len(jobs)
+    done_t = [0.0] * n
+    sub_t = [0.0] * n
+    outcomes: list = [None] * n
+
+    def cb(i):
+        def _cb(fut):
+            done_t[i] = time.monotonic()
+            outcomes[i] = fut.exception() or fut.result()
+        return _cb
+
+    t0 = time.monotonic()
+    for i, b in enumerate(jobs):
+        target = t0 + i / rate
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        sub_t[i] = time.monotonic()
+        f = svc.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
+                       tag=i, weight=b.image.static_cycle_estimate())
+        f.add_done_callback(cb(i))
+    svc.close()                           # waits for the queue to drain
+    wall = time.monotonic() - t0
+    assert all(o is not None for o in outcomes), \
+        "every submitted future must resolve"
+    lat = sorted((d - s) * 1e3 for d, s in zip(done_t, sub_t))
+    p = lambda q: lat[min(n - 1, int(q * n))]
+    st = svc.stats
+    return {
+        "kind": "serve",
+        "mode": "chaos" if faults else "clean",
+        "rate_jobs_per_sec": rate,
+        "jobs": n,
+        "p50_ms": round(p(0.50), 3),
+        "p99_ms": round(p(0.99), 3),
+        "achieved_jobs_per_sec": round(n / wall, 1),
+        "failed": st.failed, "retries": st.retries,
+        "timeouts": st.timeouts,
+        "scheduler_resets": st.scheduler_resets,
+        "faults_injected": dict(faults.injected) if faults else {},
+        "_outcomes": outcomes,            # stripped before json
+    }
+
+
+def bench_serve(cfg, batch: int = 32, n_jobs: int = 512,
+                rates: tuple = (1000.0, 4000.0), seed: int = 11) -> list[dict]:
+    """Open-loop serving latency, clean and under the chaos plan.
+
+    The chaos run's non-failed results are asserted bit-identical to a
+    fault-free plain ``drain()`` of the same jobs — injected faults may
+    cost retries and latency, never answers."""
+    import numpy as np
+
+    jobs = build_jobs(cfg, n_jobs, "light")
+    # fault-free ground truth (and compile/jit warmup for every tier)
+    _, truth = run_fleet(cfg, jobs, batch)
+    # warm the interpreter-tier runner per program too: chaos-run
+    # degradations land single jobs there, and a cold multi-second XLA
+    # compile under a sub-second dispatch watchdog would read as a hang
+    seen = set()
+    for b in jobs:
+        if b.name in seen:
+            continue
+        seen.add(b.name)
+        f = Fleet(cfg, batch_size=batch, use_compiler=False)
+        f.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+        f.drain()
+    # one unmeasured serve pass: the service pins compiled units to one
+    # fixed full-batch bucket per program, a shape the plain drain above
+    # may never have compiled — absorb those cold XLA compiles here so
+    # the measured rows reflect steady-state serving, not first-contact
+    _serve_once(cfg, jobs, batch, max(rates), None)
+
+    rows = []
+    for rate in rates:
+        for faults in (None, _chaos_plan(seed)):
+            row = _serve_once(cfg, jobs, batch, rate, faults)
+            outcomes = row.pop("_outcomes")
+            n_res = 0
+            for i, o in enumerate(outcomes):
+                if isinstance(o, Exception):
+                    continue
+                n_res += 1
+                assert np.array_equal(o.shared, truth[i].shared), \
+                    f"job {i} diverged under {row['mode']}"
+            row["verified_bit_identical"] = n_res
+            if faults is not None:
+                assert sum(1 for v in faults.injected.values() if v) >= 3, \
+                    f"chaos plan must hit >=3 fault kinds: {faults.injected}"
+            rows.append(row)
+    return rows
+
+
+def serve_smoke(batch: int = 16, n_jobs: int = 64) -> None:
+    """CI gate: at light load (one burst), the serving path's p99
+    submit->resolve latency stays within 2x of a plain ``drain()`` of
+    the same burst (plus an absolute floor so micro-walls don't flake).
+    Prints the numbers; raises on regression."""
+    cfg = fleet_config()
+    jobs = build_jobs(cfg, n_jobs, "light")
+    run_fleet(cfg, jobs, batch)           # warm every cache
+    drain_s = min(run_fleet(cfg, jobs, batch)[0] for _ in range(3))
+
+    best_p99 = None
+    for _ in range(3):
+        svc = FleetService(cfg, batch, max_delay_s=0.002)
+        done = [0.0] * n_jobs
+        t0 = time.monotonic()
+        for i, b in enumerate(jobs):
+            f = svc.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+            f.add_done_callback(
+                lambda fut, i=i: done.__setitem__(i, time.monotonic()))
+        svc.close()                       # resolves every future
+        lat = sorted(d - t0 for d in done)
+        p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+        best_p99 = p99 if best_p99 is None else min(best_p99, p99)
+    limit = max(2.0 * drain_s, drain_s + 0.05)
+    print(f"serve-smoke: drain {drain_s * 1e3:.1f}ms, "
+          f"service p99 {best_p99 * 1e3:.1f}ms, "
+          f"limit {limit * 1e3:.1f}ms")
+    assert best_p99 <= limit, \
+        f"service p99 {best_p99:.3f}s exceeds 2x drain {drain_s:.3f}s"
+
+
+def chaos_smoke(batch: int = 16, n_jobs: int = 96, seed: int = 11) -> None:
+    """CI gate: a seeded chaos run where every future resolves and all
+    non-failed results match the fault-free ground truth bit-for-bit."""
+    cfg = fleet_config()
+    rows = bench_serve(cfg, batch, n_jobs, rates=(2000.0,), seed=seed)
+    chaos = [r for r in rows if r["mode"] == "chaos"][0]
+    assert sum(chaos["faults_injected"].values()) > 0, "no faults fired"
+    print(f"chaos-smoke: {chaos['jobs']} jobs, injected "
+          f"{chaos['faults_injected']}, failed {chaos['failed']}, "
+          f"retries {chaos['retries']}, "
+          f"{chaos['verified_bit_identical']} bit-identical")
+
+
 def bench(batch: int = 32, rounds: int = 8, repeats: int = 2,
           verify: bool = True, mixes: tuple = ("light", "suite", "large")
           ) -> list[dict]:
@@ -207,6 +365,7 @@ def bench(batch: int = 32, rounds: int = 8, repeats: int = 2,
     rows = [bench_mix(cfg, m, batch, rounds, repeats, verify)
             for m in mixes]
     rows.append(bench_residency(cfg, batch))
+    rows.extend(bench_serve(cfg, batch))
     return rows
 
 
@@ -220,12 +379,23 @@ def main() -> None:
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI pass: one light round, no json")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="CI gate: service p99 within 2x of plain drain")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="CI gate: seeded chaos run, every future "
+                         "resolves, results bit-identical")
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_fleet.json"))
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a repro.obs trace of the whole run")
     args = ap.parse_args()
 
+    if args.serve_smoke:
+        serve_smoke()
+        return
+    if args.chaos_smoke:
+        chaos_smoke()
+        return
     if args.smoke:
         args.rounds, args.repeats, args.mixes = 1, 1, "light"
     tracer = Tracer("bench-fleet") if args.trace else None
@@ -238,6 +408,13 @@ def main() -> None:
         print(f"# wrote trace {args.trace}", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
+        if r.get("kind") == "serve":
+            print(f"fleet/serve_{r['mode']}_{int(r['rate_jobs_per_sec'])},"
+                  f"{r['p50_ms'] * 1e3:.1f},"
+                  f"p99_ms={r['p99_ms']};"
+                  f"jobs_per_sec={r['achieved_jobs_per_sec']};"
+                  f"failed={r['failed']};retries={r['retries']}")
+            continue
         if "residency_speedup" in r:
             print(f"fleet/resident_{r['mix']}_{r['batch']},"
                   f"{r['warm_drain_us'] / r['jobs_per_drain']:.1f},"

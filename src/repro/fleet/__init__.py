@@ -16,13 +16,26 @@ cores) and what throughput studies against IP cores need.
     h = fleet.submit(image, shared_init=data, threads=256)
     results = fleet.drain()
     results[h].shared_f32()
+
+For always-on serving (per-job futures, deadlines, priorities, retries
+with backoff, bounded admission, deterministic fault injection):
+
+    from repro.fleet import FleetService, FaultPlan
+    with FleetService(cfg, batch_size=32, max_delay_s=0.002) as svc:
+        fut = svc.submit(image, data, deadline_s=0.5)
+        fut.result()                     # JobResult, or raises JobError
 """
-from .api import Fleet, run_jobs
+from .api import Fleet, run_jobs, serve_jobs
 from .engine import ResidencyCache, fleet_run, stack_states, unstack_state
-from .scheduler import FleetJob, FleetScheduler, FleetStats, JobResult
+from .faults import FAULT_SITES, FaultPlan, FaultSpec, InjectedFault
+from .scheduler import (FleetJob, FleetScheduler, FleetStats, JobResult,
+                        check_job)
+from .service import AdmissionError, FleetService, JobError, ServiceStats
 
 __all__ = [
-    "Fleet", "run_jobs", "fleet_run", "stack_states", "unstack_state",
-    "FleetJob", "FleetScheduler", "FleetStats", "JobResult",
-    "ResidencyCache",
+    "Fleet", "run_jobs", "serve_jobs", "fleet_run", "stack_states",
+    "unstack_state", "FleetJob", "FleetScheduler", "FleetStats",
+    "JobResult", "ResidencyCache", "check_job",
+    "FleetService", "ServiceStats", "JobError", "AdmissionError",
+    "FaultPlan", "FaultSpec", "InjectedFault", "FAULT_SITES",
 ]

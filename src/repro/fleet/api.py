@@ -7,7 +7,10 @@
     results[h0].shared_f32(), results[h1].cycles
 
 ``Fleet`` is a thin facade over :class:`FleetScheduler`; ``run_jobs`` is
-the one-shot convenience for a fixed job list.
+the one-shot convenience for a fixed job list; ``serve_jobs`` is the
+same convenience routed through the always-on serving loop
+(:class:`repro.fleet.service.FleetService` — per-job futures, deadlines,
+retries, backpressure, fault isolation).
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ from ..core.blockc import TierPolicy
 from ..core.config import EGPUConfig
 from ..obs import trace as obs_trace
 from .scheduler import FleetScheduler, FleetStats, JobResult
+from .service import FleetService
 
 
 class Fleet:
@@ -115,3 +119,31 @@ def run_jobs(cfg: EGPUConfig, jobs: list[dict], *,
                             tag=j.get("tag")) for j in jobs]
     results = fleet.drain()
     return [results[h] for h in handles]
+
+
+def serve_jobs(cfg: EGPUConfig, jobs: list[dict], *,
+               batch_size: int = 32,
+               **service_kw) -> list[JobResult | Exception]:
+    """One-shot through the serving path: submit every job dict to a
+    :class:`~repro.fleet.service.FleetService`, wait for all futures,
+    and return outcomes in submission order — a
+    :class:`~repro.fleet.scheduler.JobResult` per success, the
+    :class:`~repro.fleet.service.JobError` per failure (every future
+    resolves; nothing raises out of this call).  Job dicts take the
+    :meth:`Fleet.submit` keywords plus ``priority`` and ``deadline_s``;
+    ``service_kw`` forwards to :class:`FleetService` (retry/backoff,
+    admission budget, faults, trace...)."""
+    with FleetService(cfg, batch_size, **service_kw) as svc:
+        futs = [svc.submit(j["image"], j.get("shared_init"),
+                           threads=j.get("threads"),
+                           tdx_dim=j.get("tdx_dim", 16),
+                           tag=j.get("tag"), weight=j.get("weight"),
+                           priority=j.get("priority", 1),
+                           deadline_s=j.get("deadline_s")) for j in jobs]
+        out: list[JobResult | Exception] = []
+        for f in futs:
+            try:
+                out.append(f.result())
+            except Exception as e:       # noqa: BLE001 — JobError by contract
+                out.append(e)
+    return out

@@ -41,6 +41,7 @@ from ..core.executor import make_step, pad_image, padded_length
 from ..core.isa import Op
 from ..core.machine import MachineState, init_state
 from ..obs import trace as obs_trace
+from . import faults
 
 
 class ResidencyCache:
@@ -77,6 +78,12 @@ class ResidencyCache:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def clear(self) -> None:
+        """Drop every resident entry (a later lookup just rebuilds and
+        re-transfers — an eviction is always a miss, never an error).
+        The ``residency_evict`` fault site exercises exactly this."""
+        self._entries.clear()
 
     def lookup(self, key, cp, build):
         """Return ``(arrays, hit)``: the device-resident input arrays
@@ -240,7 +247,11 @@ def fleet_run(images: list[ProgramImage],
     if timings is not None:
         timings["compile_s"] = compile_s
     with obs_trace.span("dispatch", cores=len(images), prog_len=length):
+        faults.maybe_raise("dispatch", tier="interp", cores=len(images))
         out = exe(progs, states)
     with obs_trace.span("device_sync"):
+        hang = faults.hang_seconds("device_sync", tier="interp")
+        if hang:
+            time.sleep(hang)
         out.cycles.block_until_ready()
     return out

@@ -44,7 +44,55 @@ from ..core.machine import MachineState
 from ..obs import counters as obs_counters
 from ..obs import trace as obs_trace
 from ..obs.counters import EventCounters
+from . import faults
 from .engine import ResidencyCache, fleet_run
+
+
+def check_job(cfg: EGPUConfig, image: ProgramImage, shared_init,
+              threads: int | None) -> tuple[np.ndarray | None, int]:
+    """Validate one job's inputs against ``cfg`` **at submission time**,
+    so a malformed job fails fast with a clear ``ValueError`` instead of
+    a deep XLA/NumPy shape or cast error mid-drain (where it would take
+    its whole batch down with it).  Returns the coerced
+    ``(shared_init, threads)`` pair.  Shared by :meth:`FleetScheduler.submit`
+    and :meth:`repro.fleet.service.FleetService.submit`."""
+    if image.cfg != cfg:
+        raise ValueError("job config does not match the fleet config")
+    threads = normalize_threads(image, threads)
+    if threads > cfg.max_threads or threads % cfg.num_sps:
+        raise ValueError(f"bad runtime thread count {threads}")
+    if shared_init is None:
+        return None, threads
+    arr = np.asarray(shared_init)
+    if arr.dtype.kind not in "fiub":
+        raise ValueError(
+            f"shared_init dtype {arr.dtype} is not packable into 32-bit "
+            f"shared-memory words; pass float/int/uint data")
+    if arr.size > cfg.shared_words:
+        raise ValueError(
+            f"shared_init ({arr.size} words) exceeds "
+            f"{cfg.shared_words}")
+    return arr, threads
+
+
+class DrainCancelled(RuntimeError):
+    """Raised inside a drain whose scheduler was :meth:`cancelled
+    <FleetScheduler.cancel>` — the serving watchdog abandons a hung
+    drain this way so the orphaned thread stops at the next unit
+    boundary instead of grinding through (and cold-compiling for) the
+    rest of the queue nobody will read."""
+
+
+def _result_checksum(res: "JobResult") -> bytes:
+    """Content digest of a result's architectural outputs — computed
+    when a salvaged result is stashed across drains and re-verified at
+    delivery, so silent corruption while stashed is detected (and the
+    job re-executed) instead of served."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(res.shared).tobytes())
+    h.update(int(res.cycles).to_bytes(8, "little", signed=True))
+    h.update(int(res.steps).to_bytes(8, "little", signed=True))
+    return h.digest()
 
 
 @dataclasses.dataclass
@@ -129,6 +177,16 @@ class FleetStats:
     #: already counted in ``jobs``/``wall_s`` when computed, so a
     #: per-drain consumer can subtract them instead of double-dipping
     salvaged_jobs: int = 0
+    #: units that fell down the tier chain (superblock -> blocks ->
+    #: interpreter) after a compile or dispatch failure, instead of
+    #: failing the drain
+    degraded_units: int = 0
+    #: failing batches split in half by the isolated drain so one
+    #: poison job cannot starve its cohort
+    bisections: int = 0
+    #: stashed salvaged results that failed their delivery checksum
+    #: (corrupted while waiting) — dropped and re-executed, never served
+    salvage_dropped: int = 0
 
     @property
     def jobs_per_sec(self) -> float:
@@ -212,7 +270,7 @@ class FleetScheduler:
                  pack_by_cost: bool = True, validate: bool = True,
                  use_compiler: bool = True, compile_min: int = 2,
                  tier_policy: TierPolicy | None = None,
-                 residency_max: int = 32,
+                 residency_max: int = 32, fixed_bucket: bool = False,
                  trace: bool | str | obs_trace.Tracer | None = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -237,6 +295,16 @@ class FleetScheduler:
         self.use_compiler = use_compiler
         self.compile_min = compile_min
         self.tier_policy = tier_policy
+        #: pad every compiled-tier unit to the full ``batch_size`` lanes
+        #: instead of the next power of two.  Pow2 bucketing minimizes
+        #: wasted lanes for one-shot batch drains, but every distinct
+        #: (program, bucket) shape is a separate multi-second XLA
+        #: compile — under continuous batching, where cohort sizes vary
+        #: with arrival timing, that open-ended shape set turns into
+        #: recurring compile storms.  A fixed bucket caps it at ONE
+        #: shape per program: the serving default
+        #: (:class:`repro.fleet.service.FleetService`).
+        self.fixed_bucket = fixed_bucket
         self.stats = FleetStats()
         self._queue: list[FleetJob] = []
         self._next_handle = 0
@@ -244,30 +312,39 @@ class FleetScheduler:
         #: device-resident compiled-tier inputs, replayed across drains
         self._residency = ResidencyCache(residency_max)
         #: results computed by a drain that later failed — delivered by
-        #: the next successful drain so completed work is never lost
+        #: the next drain so completed work is never lost.  Each stashed
+        #: result carries a content checksum (verified at delivery: a
+        #: corrupted result is dropped and its job re-executed) and the
+        #: FleetJob that produced it (so a drop can re-queue it).
         self._salvaged: dict[int, JobResult] = {}
+        self._salvage_sums: dict[int, bytes] = {}
+        self._salvage_jobs: dict[int, FleetJob] = {}
+        self._cancelled = False
+
+    def cancel(self) -> None:
+        """Ask an in-flight ``drain`` (possibly on another thread) to
+        abort at the next unit boundary (:class:`DrainCancelled`; the
+        crash-safe re-queue/salvage path runs as for any failure).  The
+        unit already executing cannot be interrupted — XLA dispatches
+        and compiles are uninterruptible — but nothing further starts."""
+        self._cancelled = True
 
     # ------------------------------------------------------------- queue
     def submit(self, image: ProgramImage, shared_init=None, *,
                threads: int | None = None, tdx_dim: int = 16,
                tag: Any = None, weight: float | None = None) -> int:
-        """Enqueue a job; returns its handle (stable across drains)."""
-        if image.cfg != self.cfg:
-            raise ValueError("job config does not match the fleet config")
-        threads = normalize_threads(image, threads)
-        if threads > self.cfg.max_threads or threads % self.cfg.num_sps:
-            raise ValueError(f"bad runtime thread count {threads}")
-        if shared_init is not None \
-                and np.asarray(shared_init).size > self.cfg.shared_words:
-            raise ValueError(
-                f"shared_init ({np.asarray(shared_init).size} words) "
-                f"exceeds {self.cfg.shared_words}")
+        """Enqueue a job; returns its handle (stable across drains).
+
+        Inputs are validated here (:func:`check_job`), so a malformed
+        ``shared_init`` (wrong dtype, over-length) or thread count is a
+        clear ``ValueError`` at submission, never a mid-drain batch
+        failure."""
+        shared_init, threads = check_job(self.cfg, image, shared_init,
+                                         threads)
         handle = self._next_handle
         self._next_handle += 1
         self._queue.append(FleetJob(
-            handle=handle, image=image,
-            shared_init=None if shared_init is None
-            else np.asarray(shared_init),
+            handle=handle, image=image, shared_init=shared_init,
             threads=threads, tdx_dim=tdx_dim, tag=tag, weight=weight))
         tr = self._trace()
         if tr is not None:              # open the submit->deliver pair
@@ -319,19 +396,13 @@ class FleetScheduler:
             # run at (its dominant pow2-bucketed chunk size): wide
             # lock-step batches amortize driver overhead differently
             # than single cores, and the cost model knows it
-            hint = self._bucket(min(len(group), self.batch_size),
-                                self.batch_size)
-            t0 = time.perf_counter()
-            try:
-                cp = compile_program(group[0].image, group[0].threads,
-                                     validate=self.validate,
-                                     policy=self.tier_policy,
-                                     batch_hint=hint)
-            except BlockCompileError:
-                self.stats.compile_s += time.perf_counter() - t0
+            hint = self.batch_size if self.fixed_bucket else \
+                self._bucket(min(len(group), self.batch_size),
+                             self.batch_size)
+            cp = self._compile_unit(group[0], hint, jobs=len(group))
+            if cp is None:
                 rest.extend(group)
                 continue
-            self.stats.compile_s += time.perf_counter() - t0
             tr = self._trace()
             if tr is not None:
                 tr.event("tier_group",
@@ -342,6 +413,50 @@ class FleetScheduler:
                          batch_hint=hint, tier=cp.mode)
             compiled.append((cp, group))
         return compiled, rest
+
+    def _compile_unit(self, job: FleetJob, hint: int, *,
+                      jobs: int = 1):
+        """Compile one same-program group for the compiled tier, with
+        **per-unit graceful degradation**: a compile failure at the
+        chosen tier (injected via the ``compile`` fault site, or a real
+        unexpected exception) falls down the tier chain — superblock ->
+        blocks -> interpreter — instead of failing the whole drain.
+        Returns ``None`` for the interpreter tier.  Programs the
+        compiler legitimately rejects (:class:`BlockCompileError`) go
+        straight to the interpreter, as before."""
+        tried = "auto"
+        for mode in ("auto", "blocks"):
+            t0 = time.perf_counter()
+            try:
+                cp = compile_program(job.image, job.threads,
+                                     validate=self.validate,
+                                     policy=self.tier_policy,
+                                     batch_hint=hint, mode=mode)
+                self.stats.compile_s += time.perf_counter() - t0
+                tried = cp.mode
+                faults.maybe_raise("compile", tier=cp.mode)
+                return cp
+            except BlockCompileError:
+                self.stats.compile_s += time.perf_counter() - t0
+                return None           # uncompilable: interpreter tier
+            except Exception as e:
+                self.stats.compile_s += time.perf_counter() - t0
+                # "blocks" already failed (either auto picked it, or
+                # this was the forced-blocks retry): end of the chain
+                if mode == "blocks" or tried == "blocks":
+                    self._degrade(tried, "interp", jobs, e)
+                    return None
+                self._degrade(tried, "blocks", jobs, e)
+        return None
+
+    def _degrade(self, from_tier: str, to_tier: str, jobs: int,
+                 err: Exception | None) -> None:
+        self.stats.degraded_units += 1
+        tr = self._trace()
+        if tr is not None:
+            tr.event("tier_degrade", cat="serve", from_tier=from_tier,
+                     to_tier=to_tier, jobs=jobs,
+                     error=type(err).__name__ if err else "")
 
     def _collect(self, final: MachineState, batch: list[FleetJob],
                  real: int, wall: float,
@@ -436,6 +551,8 @@ class FleetScheduler:
             tdx = np.asarray([j.tdx_dim for j in chunk], np.int32)
             return jnp.asarray(shared), jnp.asarray(tdx)
 
+        if faults.fire("residency_evict") is not None:
+            self._residency.clear()      # must be a miss, never an error
         arrays, hit = self._residency.lookup(key, cp, build)
         if hit:
             self.stats.residency_hits += 1
@@ -485,7 +602,8 @@ class FleetScheduler:
         real = len(chunk)
         with obs_trace.span("batch", tier=cp.mode, jobs=real):
             with obs_trace.span("bucket"):
-                size = self._bucket(real, self.batch_size)
+                size = self.batch_size if self.fixed_bucket else \
+                    self._bucket(real, self.batch_size)
                 pad = size - real
                 chunk = chunk + chunk[:1] * pad   # same-program filler
             t0 = time.perf_counter()
@@ -498,8 +616,12 @@ class FleetScheduler:
             compile_s = cp.light_compile(shared_dev, tdx_dev)
             self.stats.compile_s += compile_s
             with obs_trace.span("dispatch", cores=size):
+                faults.maybe_raise("dispatch", tier=cp.mode, cores=size)
                 shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev)
             with obs_trace.span("device_sync"):
+                hang = faults.hang_seconds("device_sync", tier=cp.mode)
+                if hang:
+                    time.sleep(hang)
                 shared_out.block_until_ready()
             wall = time.perf_counter() - t0 - compile_s
             with obs_trace.span("collect"):
@@ -536,22 +658,148 @@ class FleetScheduler:
         Crash-safe: if a batch raises, every job whose result has not
         been collected yet (including the failing batch's) is re-queued
         in submission order before the exception propagates, and results
-        already computed by the failed drain are stashed and delivered
-        by the next successful ``drain()`` — a failed drain loses no
-        work, computed or queued.
+        already computed by the failed drain are stashed — with content
+        checksums, re-verified at delivery — and delivered by the next
+        ``drain()``.  A failed drain loses no work, computed or queued,
+        and a result corrupted while stashed is re-executed, never
+        served.
         """
+        return self._drain_traced(isolate=False)[0]
+
+    def drain_isolated(self) -> tuple[dict[int, JobResult],
+                                      dict[int, Exception]]:
+        """Run every queued job, **containing** failures instead of
+        aborting the drain: a failing multi-job unit is bisected (one
+        poison job cannot starve its cohort), a single failing compiled
+        job is retried down the tier chain (superblock -> blocks ->
+        interpreter), and a job that fails on every tier lands in the
+        returned failures dict.  Returns ``(results, failures)`` —
+        every drained handle appears in exactly one of the two.  This
+        is the serving front-end's drain
+        (:class:`repro.fleet.service.FleetService`)."""
+        return self._drain_traced(isolate=True)
+
+    def _drain_traced(self, isolate: bool):
         if self.tracer is None:
-            return self._drain()
+            return self._drain(isolate)
         with self.tracer:                # install for nested spans
-            out = self._drain()
+            out = self._drain(isolate)
         if self._trace_path is not None:
             self.tracer.save(self._trace_path)
         return out
 
-    def _drain(self) -> dict[int, JobResult]:
-        results: dict[int, JobResult] = dict(self._salvaged)
+    def _take_salvaged(self) -> tuple[dict[int, JobResult],
+                                      dict[int, FleetJob]]:
+        """Deliverable stashed results from a previously failed drain,
+        after re-verifying each against the checksum recorded when it
+        was stashed: a corrupted result is dropped (``stats.
+        salvage_dropped``) and its job re-queued — re-executed by this
+        very drain — so corruption costs a re-run, never a wrong
+        answer."""
+        results: dict[int, JobResult] = {}
+        jobs_map: dict[int, FleetJob] = {}
+        dropped: list[FleetJob] = []
+        for h, r in self._salvaged.items():
+            job = self._salvage_jobs.get(h)
+            if _result_checksum(r) != self._salvage_sums.get(h):
+                self.stats.salvage_dropped += 1
+                tr = self._trace()
+                if tr is not None:
+                    tr.event("salvage_corrupt", cat="serve", handle=h)
+                if job is not None:
+                    dropped.append(job)
+                continue
+            results[h] = r
+            if job is not None:
+                jobs_map[h] = job
+        self._salvaged, self._salvage_sums, self._salvage_jobs = {}, {}, {}
+        if dropped:                      # oldest first, ahead of the queue
+            dropped.sort(key=lambda j: j.handle)
+            self._queue = dropped + self._queue
+        return results, jobs_map
+
+    def _stash_salvage(self, results: dict[int, JobResult],
+                       delivered_jobs: dict[int, FleetJob],
+                       all_jobs: list[FleetJob]) -> None:
+        """Stash computed results for the next drain, checksummed so
+        delivery can detect corruption while stashed (the
+        ``salvage_corrupt`` fault site flips a bit here — *after* the
+        checksum — to prove exactly that)."""
+        jobs_map = {h: j for h, j in delivered_jobs.items()
+                    if h in results}
+        jobs_map.update({j.handle: j for j in all_jobs
+                         if j.handle in results})
+        sums = {h: _result_checksum(r) for h, r in results.items()}
+        if results and faults.fire("salvage_corrupt") is not None:
+            r = results[min(results)]
+            r.shared = r.shared.copy()   # don't touch the batch's base
+            r.shared[0] ^= 1
+        self._salvaged = results
+        self._salvage_sums = sums
+        self._salvage_jobs = jobs_map
+
+    def _run_unit_isolated(self, cp, jobs: list[FleetJob],
+                           results: dict[int, JobResult],
+                           failures: dict[int, Exception]) -> None:
+        """One unit with failure isolation: a failing multi-job unit is
+        bisected (same tier) so one poison job cannot starve its
+        cohort; a single failing compiled job is retried down the tier
+        chain before being recorded in ``failures``."""
+        if self._cancelled:              # also stops bisection chains
+            raise DrainCancelled("drain cancelled")
+        try:
+            if cp is not None:
+                self._run_compiled_unit(cp, jobs, results)
+            else:
+                self._run_interp_unit(jobs, results)
+            return
+        except Exception as e:
+            err = e
+        tier = cp.mode if cp is not None else "interp"
+        tr = self._trace()
+        if len(jobs) > 1:
+            self.stats.bisections += 1
+            if tr is not None:
+                tr.event("batch_bisect", cat="serve", jobs=len(jobs),
+                         tier=tier, error=type(err).__name__)
+            mid = len(jobs) // 2
+            self._run_unit_isolated(cp, jobs[:mid], results, failures)
+            self._run_unit_isolated(cp, jobs[mid:], results, failures)
+            return
+        ncp, next_tier, degradable = self._next_tier(cp)
+        if degradable:
+            self._degrade(tier, next_tier, 1, err)
+            self._run_unit_isolated(ncp, jobs, results, failures)
+            return
+        job = jobs[0]
+        failures[job.handle] = err
+        if tr is not None:
+            tr.event("job_failed", cat="serve", handle=job.handle,
+                     tier=tier, error=type(err).__name__)
+            tr.async_end("job", id=job.handle,
+                         error=type(err).__name__)
+
+    def _next_tier(self, cp):
+        """The tier below ``cp`` for a single-job degraded retry:
+        superblock -> blocks -> interpreter -> (exhausted).  Returns
+        ``(compiled_or_None, tier_name, degradable)``."""
+        if cp is None:
+            return None, "", False       # interpreter already: exhausted
+        if cp.mode == "superblock":
+            try:
+                ncp = compile_program(cp.image, cp.threads,
+                                      validate=self.validate,
+                                      policy=self.tier_policy,
+                                      mode="blocks")
+                return ncp, "blocks", True
+            except Exception:            # blocks compile also failing
+                return None, "interp", True
+        return None, "interp", True
+
+    def _drain(self, isolate: bool = False):
+        results, delivered_jobs = self._take_salvaged()
         n_salvaged = len(results)        # counted only on delivery
-        self._salvaged = {}
+        failures: dict[int, Exception] = {}
         all_jobs = self._queue
         self._queue = []
         units: list[tuple] | None = None
@@ -579,7 +827,12 @@ class FleetScheduler:
                                  for batch in self._batches(jobs))
 
                 for idx, (cp, unit_jobs) in enumerate(units):
-                    if cp is not None:
+                    if self._cancelled:
+                        raise DrainCancelled("drain cancelled")
+                    if isolate:
+                        self._run_unit_isolated(cp, unit_jobs, results,
+                                                failures)
+                    elif cp is not None:
                         self._run_compiled_unit(cp, unit_jobs, results)
                     else:
                         self._run_interp_unit(unit_jobs, results)
@@ -588,10 +841,11 @@ class FleetScheduler:
                     unprocessed = list(all_jobs)
                 else:
                     unprocessed = [j for _, us in units[idx:] for j in us
-                                   if j.handle not in results]
+                                   if j.handle not in results
+                                   and j.handle not in failures]
                 unprocessed.sort(key=lambda j: j.handle)
                 self._queue = unprocessed + self._queue
-                self._salvaged = results     # deliver on the next drain
+                self._stash_salvage(results, delivered_jobs, all_jobs)
                 raise
 
             tr = obs_trace.current_tracer()
@@ -604,9 +858,10 @@ class FleetScheduler:
                     tr.add_counters(flat)
                 if dsp.active:
                     dsp.set(delivered=len(results),
+                            failed=len(failures),
                             batches=len(units))
         # salvaged results were computed (and counted into jobs/wall_s/
         # tier splits) by the drain that ran them; delivery only marks
         # them so per-drain consumers don't double-dip the timing
         self.stats.salvaged_jobs += n_salvaged
-        return results
+        return results, failures

@@ -1,0 +1,532 @@
+"""Always-on serving loop over the fleet: continuous batching with
+deadlines, priorities, retries, backpressure, and fault isolation.
+
+:class:`FleetService` turns the batch-mode ``submit()``/``drain()``
+scheduler into a stream-serving front-end:
+
+* **per-job futures** — :meth:`FleetService.submit` returns a
+  :class:`concurrent.futures.Future` that resolves to a
+  :class:`~repro.fleet.scheduler.JobResult` or raises a structured
+  :class:`JobError` (kind, attempts, cause).  Every submitted future
+  resolves, always — that is the serving contract.  Wrap with
+  ``asyncio.wrap_future`` to await from an event loop;
+* **deadline-or-size batching** — a background dispatcher forms a
+  lock-step cohort the moment ``batch_size`` jobs are ready *or* the
+  oldest ready job has waited ``max_delay_s``, whichever fires first;
+* **priority lanes** — lower ``priority`` dispatches first within a
+  trigger (ties broken by submission order);
+* **per-job deadlines** — a job past its deadline is *masked out of its
+  batch slot* and failed fast with ``JobError(kind="deadline")``: the
+  paper's per-instruction thread-space subsetting (TSC) applied at
+  request granularity, exactly like the slot-masked decode loop in
+  :mod:`repro.launch.serve`;
+* **bounded admission** — once queued+in-flight cost (the cost model's
+  per-job estimates) exceeds ``cost_budget`` (or ``max_pending`` jobs),
+  ``submit`` blocks (``admission="block"``) or raises
+  :class:`AdmissionError` (``admission="reject"``): overload degrades
+  into latency or fast rejections, never an unbounded queue;
+* **per-job retries with exponential backoff** — a failed dispatch is
+  bisected by :meth:`FleetScheduler.drain_isolated` so one poison job
+  cannot starve its cohort; jobs that still fail are retried up to
+  ``max_retries`` times (backoff ``backoff_s * backoff_factor**k``),
+  then fail their future with a structured :class:`JobError` instead of
+  poisoning the drain;
+* **dispatch watchdog** — with ``dispatch_timeout_s`` set, a hung
+  dispatch (e.g. a device sync that never returns — the
+  ``device_sync`` fault site) is abandoned: the scheduler is replaced
+  wholesale and the cohort is retried/failed as timeouts.
+
+Failure injection for all of the above is
+:class:`repro.fleet.faults.FaultPlan` — pass one as ``faults=`` (or
+install it ambiently) and the chaos run stays deterministic.
+
+    svc = FleetService(cfg, batch_size=32, max_delay_s=0.002)
+    fut = svc.submit(image, data, deadline_s=0.5, priority=0)
+    res = fut.result()               # JobResult, or raises JobError
+    svc.close()
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any
+
+from ..core.assembler import ProgramImage
+from ..core.blockc import TierPolicy
+from ..core.config import EGPUConfig
+from ..obs import trace as obs_trace
+from . import faults as faults_mod
+from .scheduler import FleetScheduler, JobResult, check_job
+
+__all__ = ["FleetService", "ServiceStats", "JobError", "AdmissionError"]
+
+
+class JobError(Exception):
+    """Structured per-job failure: resolves the job's future.
+
+    ``kind`` is one of ``"deadline"`` (missed its deadline before
+    dispatch), ``"timeout"`` (dispatch watchdog fired and retries ran
+    out), ``"error"`` (failed on every tier and every retry),
+    ``"shutdown"`` (service closed without draining).  ``attempts`` is
+    how many dispatches the job consumed; ``cause`` the last underlying
+    exception (``None`` for deadline/shutdown)."""
+
+    def __init__(self, kind: str, *, ticket: int = -1, attempts: int = 0,
+                 detail: str = "", cause: Exception | None = None):
+        self.kind = kind
+        self.ticket = ticket
+        self.attempts = attempts
+        self.detail = detail
+        self.cause = cause
+        msg = f"job {ticket} failed ({kind}) after {attempts} attempt(s)"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+class AdmissionError(RuntimeError):
+    """``submit()`` rejected: the service is over its admission budget
+    (``admission="reject"``) — shed load upstream or retry later."""
+
+
+@dataclasses.dataclass
+class _Ticket:
+    """One in-flight service job (internal)."""
+
+    tid: int
+    image: ProgramImage
+    shared_init: Any
+    threads: int
+    tdx_dim: int
+    tag: Any
+    weight: float | None
+    priority: int
+    cost: float
+    submit_t: float                  # monotonic, for latency accounting
+    enqueue_t: float                 # reset on retry: batching trigger
+    deadline: float | None           # absolute monotonic, or None
+    future: Future
+    attempts: int = 0
+    not_before: float = 0.0          # backoff gate
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Aggregate serving counters (monotonic across the service life)."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0                  # futures resolved with JobError
+    rejected: int = 0                # AdmissionError raised at submit
+    deadline_misses: int = 0         # failed with kind="deadline"
+    timeouts: int = 0                # dispatch watchdog firings (jobs)
+    retries: int = 0                 # re-queues after a failed attempt
+    dispatches: int = 0              # cohorts handed to the scheduler
+    dispatched_jobs: int = 0
+    scheduler_resets: int = 0        # schedulers abandoned (hang/crash)
+
+    @property
+    def resolved(self) -> int:
+        return self.completed + self.failed
+
+
+class FleetService:
+    """An always-on serving front-end over :class:`FleetScheduler`.
+
+    One background dispatcher thread owns the scheduler; ``submit`` is
+    thread-safe and never touches the device.  ``trace=`` accepts the
+    same knob as :class:`~repro.fleet.api.Fleet` (``True`` / path /
+    :class:`~repro.obs.Tracer`); serving events (``job_retry``,
+    ``job_failed``, ``dispatch_timeout``, ``admission_reject``,
+    ``tier_degrade``, ``fault_injected``) land in the same Perfetto
+    trace as the drain spans, with per-request ``request`` async pairs
+    measuring true submit->resolve latency (queue wait included).
+    ``faults=`` installs a :class:`~repro.fleet.faults.FaultPlan` for
+    everything the dispatcher runs.
+    """
+
+    def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
+                 max_delay_s: float = 0.005,
+                 max_retries: int = 2, backoff_s: float = 0.002,
+                 backoff_factor: float = 2.0,
+                 dispatch_timeout_s: float | None = None,
+                 default_deadline_s: float | None = None,
+                 cost_budget: float | None = None,
+                 max_pending: int | None = None,
+                 admission: str = "block",
+                 faults: faults_mod.FaultPlan | None = None,
+                 trace: bool | str | obs_trace.Tracer | None = None,
+                 pack_by_cost: bool = True, validate: bool = True,
+                 use_compiler: bool = True, compile_min: int = 1,
+                 tier_policy: TierPolicy | None = None,
+                 residency_max: int = 32, fixed_bucket: bool = True):
+        if admission not in ("block", "reject"):
+            raise ValueError("admission must be 'block' or 'reject'")
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.max_delay_s = max_delay_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_factor = backoff_factor
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.default_deadline_s = default_deadline_s
+        self.cost_budget = cost_budget
+        self.max_pending = max_pending
+        self.admission = admission
+        self.faults = faults
+        self.stats = ServiceStats()
+
+        self.tracer: obs_trace.Tracer | None = None
+        self._trace_path: str | None = None
+        if isinstance(trace, obs_trace.Tracer):
+            self.tracer = trace
+        elif isinstance(trace, str):
+            self.tracer = obs_trace.Tracer("service")
+            self._trace_path = trace
+        elif trace:
+            self.tracer = obs_trace.Tracer("service")
+
+        # all schedulers (incl. watchdog replacements) share one tracer
+        # and one residency/compile-cache regime.  Serving defaults
+        # differ from batch drains: ``compile_min=1`` (programs repeat
+        # forever, so even a singleton group should ride the cached
+        # compiled tier, not the interpreter) and ``fixed_bucket=True``
+        # (one XLA shape per program — ragged cohort sizes must not
+        # spray pow2 bucket shapes, each a multi-second compile, across
+        # the steady-state latency profile)
+        self._sched_kw = dict(pack_by_cost=pack_by_cost,
+                              validate=validate,
+                              use_compiler=use_compiler,
+                              compile_min=compile_min,
+                              tier_policy=tier_policy,
+                              residency_max=residency_max,
+                              fixed_bucket=fixed_bucket)
+        self._sched = self._make_sched()
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._queue: list[_Ticket] = []
+        self._pending_cost = 0.0         # queued, not yet dispatched
+        self._inflight_cost = 0.0        # dispatched, not yet resolved
+        self._next_tid = 0
+        self._closed = False
+        self._abandoned: list[threading.Thread] = []
+        self._thread = threading.Thread(target=self._loop,
+                                        name="fleet-service-dispatch",
+                                        daemon=True)
+        self._thread.start()
+
+    def _make_sched(self) -> FleetScheduler:
+        return FleetScheduler(self.cfg, self.batch_size,
+                              trace=self.tracer, **self._sched_kw)
+
+    # ----------------------------------------------------------- intake
+    @property
+    def pending(self) -> int:
+        """Jobs queued but not yet dispatched (in-flight excluded)."""
+        with self._lock:
+            return len(self._queue)
+
+    def _load_cost(self) -> float:
+        return self._pending_cost + self._inflight_cost
+
+    def _over_budget(self, cost: float) -> bool:
+        if self.max_pending is not None \
+                and len(self._queue) >= self.max_pending:
+            return True
+        return self.cost_budget is not None \
+            and self._load_cost() + cost > self.cost_budget
+
+    def submit(self, image: ProgramImage, shared_init=None, *,
+               threads: int | None = None, tdx_dim: int = 16,
+               tag: Any = None, weight: float | None = None,
+               priority: int = 1,
+               deadline_s: float | None = None) -> Future:
+        """Queue one job; returns its future (``result()`` ->
+        :class:`~repro.fleet.scheduler.JobResult`, or raises
+        :class:`JobError`).  Malformed inputs fail here, synchronously,
+        with ``ValueError`` — never mid-drain.  ``deadline_s`` is
+        relative to now (``default_deadline_s`` when ``None``); a job
+        that cannot dispatch before its deadline is masked out of its
+        batch and failed fast.  Over budget, ``submit`` blocks or
+        raises :class:`AdmissionError` per the ``admission`` mode."""
+        shared_init, threads = check_job(self.cfg, image, shared_init,
+                                         threads)
+        cost = float(weight) if weight is not None \
+            else float(image.static_cycle_estimate())
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        now = time.monotonic()
+        with self._work:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            while self._over_budget(cost):
+                if self.admission == "reject":
+                    self.stats.rejected += 1
+                    if self.tracer is not None:
+                        self.tracer.event("admission_reject", cat="serve",
+                                          cost=cost,
+                                          load=self._load_cost())
+                    raise AdmissionError(
+                        f"admission budget exceeded (load "
+                        f"{self._load_cost():.0f} + job {cost:.0f} > "
+                        f"budget {self.cost_budget}, pending "
+                        f"{len(self._queue)})")
+                self._work.wait(0.05)
+                if self._closed:
+                    raise RuntimeError("service is closed")
+            tid = self._next_tid
+            self._next_tid += 1
+            now = time.monotonic()
+            t = _Ticket(tid=tid, image=image, shared_init=shared_init,
+                        threads=threads, tdx_dim=tdx_dim, tag=tag,
+                        weight=weight, priority=priority, cost=cost,
+                        submit_t=now, enqueue_t=now,
+                        deadline=None if deadline_s is None
+                        else now + deadline_s,
+                        future=Future())
+            self.stats.submitted += 1
+            self._pending_cost += cost
+            self._queue.append(t)
+            self._work.notify_all()
+        if self.tracer is not None:
+            self.tracer.async_begin("request", id=tid,
+                                    priority=priority, cost=cost)
+        return t.future
+
+    # ------------------------------------------------------- dispatcher
+    def _loop(self) -> None:
+        with contextlib.ExitStack() as stack:
+            # a fresh thread has a fresh context: install the service's
+            # tracer and fault plan for everything the dispatcher runs
+            if self.tracer is not None:
+                stack.enter_context(self.tracer)
+            if self.faults is not None:
+                stack.enter_context(self.faults)
+            while True:
+                expired, cohort = [], []
+                with self._work:
+                    if self._closed and not self._queue:
+                        break
+                    now = time.monotonic()
+                    expired = [t for t in self._queue
+                               if t.deadline is not None
+                               and now >= t.deadline]
+                    if expired:
+                        gone = {t.tid for t in expired}
+                        self._queue = [t for t in self._queue
+                                       if t.tid not in gone]
+                        for t in expired:
+                            self._pending_cost -= t.cost
+                            self._inflight_cost += t.cost  # _fail releases
+                        self._work.notify_all()
+                    else:
+                        ready = [t for t in self._queue
+                                 if t.not_before <= now]
+                        oldest = min((t.enqueue_t for t in ready),
+                                     default=None)
+                        full = len(ready) >= self.batch_size
+                        due = oldest is not None \
+                            and now - oldest >= self.max_delay_s
+                        if ready and (full or due or self._closed):
+                            ready.sort(key=lambda t: (t.priority, t.tid))
+                            cohort = ready[:self.batch_size]
+                            gone = {t.tid for t in cohort}
+                            self._queue = [t for t in self._queue
+                                           if t.tid not in gone]
+                            for t in cohort:
+                                self._pending_cost -= t.cost
+                                self._inflight_cost += t.cost
+                        else:
+                            self._work.wait(self._next_wake(now))
+                            continue
+                # futures resolve outside the lock (their callbacks may
+                # re-enter submit)
+                for t in expired:
+                    self._fail(t, "deadline",
+                               detail="deadline passed before dispatch")
+                if cohort:
+                    self._dispatch(cohort)
+
+    def _next_wake(self, now: float) -> float | None:
+        """Seconds until the next scheduled trigger (batch-delay expiry,
+        backoff release, or deadline), or ``None`` to wait for work."""
+        nxt = None
+        for t in self._queue:
+            cands = [max(t.not_before, t.enqueue_t + self.max_delay_s)]
+            if t.deadline is not None:
+                cands.append(t.deadline)
+            c = min(cands)
+            nxt = c if nxt is None else min(nxt, c)
+        if nxt is None:
+            return None
+        return max(1e-4, nxt - now)
+
+    def _dispatch(self, cohort: list[_Ticket]) -> None:
+        self.stats.dispatches += 1
+        self.stats.dispatched_jobs += len(cohort)
+        sched = self._sched
+        try:
+            handle2t = {
+                sched.submit(t.image, t.shared_init, threads=t.threads,
+                             tdx_dim=t.tdx_dim, tag=t.tag,
+                             weight=t.weight): t
+                for t in cohort}
+            out = self._drain(sched)
+        except Exception as e:
+            # the scheduler itself misbehaved (not a contained per-unit
+            # failure): abandon it — its internal queue may still hold
+            # re-queued jobs — and retry the cohort on a fresh one
+            self._reset_sched("drain_error", e)
+            for t in cohort:
+                self._retry_or_fail(t, "error", e)
+            return
+        if out is None:                  # watchdog fired: hung dispatch
+            self._reset_sched("dispatch_timeout", None)
+            self.stats.timeouts += len(cohort)
+            for t in cohort:
+                self._retry_or_fail(t, "timeout", None)
+            return
+        results, failures = out
+        for h, t in handle2t.items():
+            if h in results:
+                self._complete(t, results[h])
+            else:
+                self._retry_or_fail(t, "error", failures.get(h))
+
+    def _drain(self, sched: FleetScheduler):
+        """``drain_isolated`` with the watchdog: returns ``(results,
+        failures)``, or ``None`` when the dispatch exceeded
+        ``dispatch_timeout_s`` (the drain thread is abandoned; its late
+        results are discarded along with its scheduler)."""
+        if self.dispatch_timeout_s is None:
+            return sched.drain_isolated()
+        box: dict[str, Any] = {}
+        ctx = contextvars.copy_context()   # carry tracer + fault plan
+
+        def run():
+            try:
+                box["out"] = ctx.run(sched.drain_isolated)
+            except BaseException as e:     # noqa: BLE001 — relayed below
+                box["err"] = e
+
+        th = threading.Thread(target=run, daemon=True,
+                              name="fleet-service-drain")
+        th.start()
+        th.join(self.dispatch_timeout_s)
+        if th.is_alive():
+            sched.cancel()   # orphan stops at its next unit boundary
+            self._abandoned.append(th)
+            return None
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    def _reset_sched(self, why: str, err: Exception | None) -> None:
+        self.stats.scheduler_resets += 1
+        if self.tracer is not None:
+            self.tracer.event(why, cat="serve",
+                              error=type(err).__name__ if err else "")
+        self._sched = self._make_sched()
+
+    # ------------------------------------------------------- resolution
+    def _release(self, t: _Ticket) -> None:
+        with self._work:
+            self._inflight_cost -= t.cost
+            self._work.notify_all()
+
+    def _complete(self, t: _Ticket, res: JobResult) -> None:
+        t.attempts += 1
+        self._release(t)
+        self.stats.completed += 1
+        if self.tracer is not None:
+            self.tracer.async_end("request", id=t.tid, tier=res.tier,
+                                  attempts=t.attempts)
+        t.future.set_result(res)
+
+    def _retry_or_fail(self, t: _Ticket, kind: str,
+                       cause: Exception | None) -> None:
+        t.attempts += 1
+        now = time.monotonic()
+        missed = t.deadline is not None and now >= t.deadline
+        if missed or t.attempts > self.max_retries:
+            self._fail(t, "deadline" if missed else kind,
+                       cause=cause,
+                       detail="" if missed else
+                       f"retries exhausted ({t.attempts} attempts)")
+            return
+        delay = self.backoff_s * self.backoff_factor ** (t.attempts - 1)
+        t.not_before = now + delay
+        self.stats.retries += 1
+        if self.tracer is not None:
+            self.tracer.event("job_retry", cat="serve", id=t.tid,
+                              attempts=t.attempts, kind=kind,
+                              backoff_s=round(delay, 6))
+        with self._work:
+            self._inflight_cost -= t.cost
+            self._pending_cost += t.cost
+            t.enqueue_t = now
+            self._queue.append(t)
+            self._work.notify_all()
+
+    def _fail(self, t: _Ticket, kind: str, *,
+              cause: Exception | None = None, detail: str = "") -> None:
+        self._release(t)
+        self.stats.failed += 1
+        if kind == "deadline":
+            self.stats.deadline_misses += 1
+        if self.tracer is not None:
+            self.tracer.event("job_failed", cat="serve", id=t.tid,
+                              kind=kind, attempts=t.attempts)
+            self.tracer.async_end("request", id=t.tid, error=kind)
+        t.future.set_exception(JobError(
+            kind, ticket=t.tid, attempts=t.attempts, detail=detail,
+            cause=cause))
+
+    # --------------------------------------------------------- shutdown
+    def close(self, wait: bool = True,
+              timeout: float | None = None) -> None:
+        """Stop the service.  ``wait=True`` (default) drains everything
+        still queued (deadlines and retries still apply) before the
+        dispatcher exits; ``wait=False`` fails queued jobs fast with
+        ``JobError(kind="shutdown")``.  Idempotent."""
+        with self._work:
+            self._closed = True
+            dropped = []
+            if not wait:
+                dropped, self._queue = self._queue, []
+                for t in dropped:
+                    self._pending_cost -= t.cost
+                    self._inflight_cost += t.cost  # _fail releases it
+            self._work.notify_all()
+        for t in dropped:
+            self._fail(t, "shutdown", detail="service closed")
+        self._thread.join(timeout)
+        # give watchdog-abandoned drains a bounded chance to finish so
+        # the interpreter doesn't tear down under a live XLA dispatch (a
+        # truly wedged one stays a daemon and is dropped with the
+        # process)
+        for th in self._abandoned:
+            th.join(2.0)
+        self._abandoned = [th for th in self._abandoned if th.is_alive()]
+        if self._trace_path is not None and self.tracer is not None:
+            self.tracer.save(self._trace_path)
+
+    def save_trace(self, path: str) -> None:
+        """Write the service tracer's Chrome/Perfetto trace JSON."""
+        if self.tracer is None:
+            raise ValueError("service was created without trace=")
+        self.tracer.save(path)
+
+    def __enter__(self) -> "FleetService":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close(wait=exc == (None, None, None))
+        return False

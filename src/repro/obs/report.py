@@ -119,18 +119,39 @@ def tier_decisions(events: list[dict]) -> list[dict]:
             if e.get("name") == "tier_decision"]
 
 
-def job_latencies(events: list[dict]) -> dict[int, float]:
-    """``{handle: submit -> deliver latency in us}`` from async pairs."""
-    begins: dict[int, float] = {}
-    lat: dict[int, float] = {}
+def job_latencies(events: list[dict],
+                  name: str | None = None) -> dict[tuple, float]:
+    """``{(name, id): begin -> end latency in us}`` from async pairs.
+
+    The scheduler emits ``job`` pairs (handed to a drain -> delivered);
+    the serving layer emits ``request`` pairs (submitted -> future
+    resolved, queue wait and retries included) — same id space, distinct
+    names, so pairs are keyed by both.  Pass ``name`` to filter."""
+    begins: dict[tuple, float] = {}
+    lat: dict[tuple, float] = {}
     for e in events:
         if e.get("cat") != "async":
             continue
+        if name is not None and e.get("name") != name:
+            continue
+        key = (e.get("name"), e["id"])
         if e["ph"] == "b":
-            begins[e["id"]] = e["ts"]
-        elif e["ph"] == "e" and e["id"] in begins:
-            lat[e["id"]] = e["ts"] - begins[e["id"]]
+            begins[key] = e["ts"]
+        elif e["ph"] == "e" and key in begins:
+            lat[key] = e["ts"] - begins[key]
     return lat
+
+
+def serve_events(events: list[dict]) -> dict[str, int]:
+    """Counts of serving/fault instants (``cat`` in ``serve``/``fault``),
+    keyed ``"<cat>:<name>"`` — the at-a-glance robustness story of a
+    chaos run (retries, timeouts, degradations, injections...)."""
+    out: dict[str, int] = {}
+    for e in events:
+        if e.get("ph") == "i" and e.get("cat") in ("serve", "fault"):
+            k = f"{e['cat']}:{e['name']}"
+            out[k] = out.get(k, 0) + 1
+    return out
 
 
 def _pct(sorted_vals: list[float], q: float) -> float:
@@ -198,14 +219,25 @@ def render(events: list[dict]) -> str:
                 f"{str(f.get('trace_cost')):>6} "
                 f"{f.get('fori_execd', 0):>8}  {d.get('rule', '?')}")
 
-    lat = sorted(job_latencies(events).values())
-    if lat:
+    all_lat = job_latencies(events)
+    names = sorted({k[0] for k in all_lat})
+    for nm in names:
+        lat = sorted(v for k, v in all_lat.items() if k[0] == nm)
+        label = {"job": "dispatch->deliver",
+                 "request": "submit->resolve"}.get(nm, nm)
         lines.append("")
         lines.append(
-            f"== job latency == {len(lat)} jobs, submit->deliver "
+            f"== {nm} latency == {len(lat)} jobs, {label} "
             f"p50 {_fmt_us(_pct(lat, 0.50))} / "
             f"p90 {_fmt_us(_pct(lat, 0.90))} / "
             f"p99 {_fmt_us(_pct(lat, 0.99))} / max {_fmt_us(lat[-1])}")
+
+    srv = serve_events(events)
+    if srv:
+        lines.append("")
+        lines.append("== serving / fault events ==")
+        for k in sorted(srv):
+            lines.append(f"  {k:<32} {srv[k]:>8,}")
 
     return "\n".join(lines)
 

@@ -146,10 +146,13 @@ class Tracer:
     def span(self, name: str, **args) -> _Span:
         return _Span(self, name, args)
 
-    def event(self, name: str, **args) -> None:
-        """Record an instant event (a point on the timeline)."""
+    def event(self, name: str, cat: str = "event", **args) -> None:
+        """Record an instant event (a point on the timeline).  ``cat``
+        groups events for filtering in the Perfetto UI and in
+        :mod:`repro.obs.report` (e.g. ``"serve"`` for retry/timeout/
+        degrade events, ``"fault"`` for injections)."""
         self._events.append({
-            "name": name, "cat": "event", "ph": "i", "s": "t",
+            "name": name, "cat": cat, "ph": "i", "s": "t",
             "ts": self.now_us(), "pid": self._pid, "tid": self._tid(),
             "args": args,
         })
@@ -224,8 +227,8 @@ def span(name: str, **args):
     return tr.span(name, **args)
 
 
-def event(name: str, **args) -> None:
+def event(name: str, cat: str = "event", **args) -> None:
     """An instant event against the current tracer; no-op when disabled."""
     tr = _TRACER.get()
     if tr is not None:
-        tr.event(name, **args)
+        tr.event(name, cat=cat, **args)

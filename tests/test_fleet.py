@@ -263,6 +263,27 @@ def test_fleet_rejects_mismatched_config():
         fleet.submit(img)
 
 
+def test_submit_validates_shared_init_fail_fast():
+    """Regression: a malformed ``shared_init`` (over-length or an
+    unpackable dtype) raises ``ValueError`` at submit time and leaves
+    the queue untouched — it must never reach a drain, where the shape
+    or cast error would take the whole batch down with it."""
+    a = Asm(CFG)
+    a.stop()
+    img = a.assemble()
+    fleet = Fleet(CFG, batch_size=4)
+    with pytest.raises(ValueError, match="exceeds"):
+        fleet.submit(img, np.zeros(CFG.shared_words + 1, np.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        fleet.submit(img, np.zeros(8, np.complex64))
+    with pytest.raises(ValueError, match="thread count"):
+        fleet.submit(img, threads=CFG.num_sps + 1)
+    assert fleet.pending == 0
+    h = fleet.submit(img, np.zeros(8, np.float32))  # valid job still fine
+    assert fleet.pending == 1
+    assert h in fleet.drain()
+
+
 def _loop_prog(iters=64):
     """Same-program loop job for the compiled/superblock fleet tiers."""
     a = Asm(CFG)
@@ -369,13 +390,13 @@ def test_stats_consistent_after_failed_then_salvaged_drain(monkeypatch):
     calls = {"n": 0}
     real = CompiledProgram.run_light_dev
 
-    def failing(self, shared, tdx):
+    def failing2(self, shared, tdx):
         calls["n"] += 1
-        if calls["n"] == 2:
+        if calls["n"] in (2, 4):
             raise RuntimeError("injected")
         return real(self, shared, tdx)
 
-    monkeypatch.setattr(CompiledProgram, "run_light_dev", failing)
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", failing2)
     with pytest.raises(RuntimeError):
         fleet.drain()
     s = fleet.stats
@@ -385,15 +406,27 @@ def test_stats_consistent_after_failed_then_salvaged_drain(monkeypatch):
     assert s.salvaged_jobs == 0               # computed, not yet delivered
     wall_after_fail = s.wall_s
     assert wall_after_fail > 0
+    # the unfinished jobs are re-queued in submission order, once each
+    assert [j.handle for j in fleet._sched._queue] == hs[2:]
+
+    # second consecutive failing drain: the first stash must survive,
+    # the batch that just ran (call 3) joins it, and nothing from either
+    # failed drain is double-counted
+    with pytest.raises(RuntimeError):
+        fleet.drain()
+    assert s.jobs == s.compiled_jobs == s.superblock_jobs == 4
+    assert s.batches == s.compiled_batches == 2
+    assert s.salvaged_jobs == 0               # still undelivered
+    assert [j.handle for j in fleet._sched._queue] == hs[4:]
 
     monkeypatch.setattr(CompiledProgram, "run_light_dev", real)
     results = fleet.drain()
     assert sorted(results) == sorted(hs)
-    # each of the 6 jobs counted exactly once across both drains; the 2
-    # salvaged results added no second helping of jobs or wall time
+    # each of the 6 jobs counted exactly once across all three drains;
+    # the 4 salvaged results added no second helping of jobs/wall time
     assert s.jobs == s.compiled_jobs == s.superblock_jobs == 6
     assert s.batches == s.compiled_batches == 3
-    assert s.salvaged_jobs == 2
+    assert s.salvaged_jobs == 4
     assert s.jobs_per_sec == pytest.approx(s.jobs / s.wall_s)
     for d, h in zip(datas, hs):
         ref = run_program(img, shared_init=d, tdx_dim=32)

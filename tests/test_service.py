@@ -1,0 +1,428 @@
+"""Serving-layer tests: FleetService futures/deadlines/retries/
+backpressure, the fault-injection harness, per-unit tier degradation,
+bisection, salvage checksums, and a small chaos soak."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Asm, EGPUConfig, run_program
+from repro.core import machine as machine_mod
+from repro.fleet import (AdmissionError, FaultPlan, FleetScheduler,
+                         FleetService, InjectedFault, JobError, serve_jobs)
+
+CFG = EGPUConfig(max_threads=64, regs_per_thread=32, shared_kb=4,
+                 predicate_levels=4, has_dot=True, has_invsqr=True)
+
+
+def _loop_prog(iters=16):
+    """Same-program loop job: lands on the compiled/superblock tiers."""
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    with a.loop(iters):
+        a.fadd(2, 2, 2)
+    a.sto(2, 1, 0)
+    a.stop()
+    return a.assemble(threads_active=32)
+
+
+def _datas(n, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(32).astype(np.float32) for _ in range(n)]
+
+
+def _refs(img, datas):
+    return [machine_mod.shared_as_u32(
+        run_program(img, shared_init=d, tdx_dim=32)) for d in datas]
+
+
+# ---------------------------------------------------------------------------
+# FleetService basics
+# ---------------------------------------------------------------------------
+
+def test_service_round_trip_bit_identical():
+    img = _loop_prog()
+    datas = _datas(12)
+    with FleetService(CFG, batch_size=4, max_delay_s=0.001) as svc:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in datas]
+        res = [f.result(timeout=300) for f in futs]
+    for d, r, ref in zip(datas, res, _refs(img, datas)):
+        assert np.array_equal(r.shared_u32(), ref)
+    st = svc.stats
+    assert st.submitted == st.completed == 12
+    assert st.failed == st.retries == st.rejected == 0
+    assert st.dispatched_jobs == 12
+
+
+def test_service_submit_validates_inputs():
+    img = _loop_prog()
+    with FleetService(CFG, batch_size=4) as svc:
+        with pytest.raises(ValueError):
+            svc.submit(img, np.zeros(4, np.complex64))      # bad dtype
+        with pytest.raises(ValueError):
+            svc.submit(img, np.zeros(CFG.shared_words + 1,
+                                     np.float32))           # over-length
+        with pytest.raises(ValueError):
+            svc.submit(img, threads=CFG.num_sps + 1)        # ragged
+    assert svc.stats.submitted == 0
+
+
+def test_deadline_miss_fails_fast():
+    img = _loop_prog()
+    with FleetService(CFG, batch_size=4, max_delay_s=0.5) as svc:
+        fut = svc.submit(img, _datas(1)[0], deadline_s=1e-4)
+        with pytest.raises(JobError) as ei:
+            fut.result(timeout=60)
+    assert ei.value.kind == "deadline"
+    assert svc.stats.deadline_misses == 1
+    assert svc.stats.failed == 1
+
+
+def test_backpressure_reject_mode():
+    img = _loop_prog()
+    svc = FleetService(CFG, batch_size=4, max_delay_s=5.0, max_pending=2,
+                       admission="reject")
+    try:
+        f1 = svc.submit(img, _datas(1)[0])
+        f2 = svc.submit(img, _datas(1)[0])
+        with pytest.raises(AdmissionError):
+            svc.submit(img, _datas(1)[0])
+        assert svc.stats.rejected == 1
+    finally:
+        svc.close()
+    assert f1.result(timeout=60) is not None
+    assert f2.result(timeout=60) is not None
+
+
+def test_backpressure_block_mode_unblocks_on_drain():
+    img = _loop_prog()
+    svc = FleetService(CFG, batch_size=2, max_delay_s=0.001, max_pending=2,
+                       admission="block")
+    try:
+        futs = [svc.submit(img, d) for d in _datas(2)]
+        # the third submit may block until the dispatcher frees capacity;
+        # it must return (not raise) and its job must complete
+        f3 = svc.submit(img, _datas(1, seed=9)[0])
+        assert f3.result(timeout=300) is not None
+        for f in futs:
+            assert f.result(timeout=300) is not None
+    finally:
+        svc.close()
+    assert svc.stats.rejected == 0
+
+
+def test_close_without_wait_fails_queued_jobs():
+    img = _loop_prog()
+    svc = FleetService(CFG, batch_size=4, max_delay_s=10.0)
+    fut = svc.submit(img, _datas(1)[0])
+    svc.close(wait=False)
+    try:
+        fut.result(timeout=60)
+    except JobError as e:
+        assert e.kind == "shutdown"
+    # a dispatch may have squeaked in before close; either way it resolved
+    assert fut.done()
+    with pytest.raises(RuntimeError):
+        svc.submit(img, _datas(1)[0])
+
+
+def test_priority_lanes_dispatch_high_priority_first():
+    img = _loop_prog()
+    order: list[int] = []
+    # batch_size starts larger than the job count so the dispatcher
+    # cannot form a cohort while we enqueue; shrinking it afterwards
+    # releases cohorts of 2, best priority first
+    svc = FleetService(CFG, batch_size=64, max_delay_s=30.0)
+    try:
+        futs = []
+        for i, d in enumerate(_datas(6)):
+            prio = 0 if i == 5 else 1    # last submit, highest priority
+            f = svc.submit(img, d, priority=prio)
+            f.add_done_callback(lambda _, i=i: order.append(i))
+            futs.append(f)
+        svc.batch_size = 2
+        with svc._work:
+            svc._work.notify_all()
+        for f in futs:
+            f.result(timeout=300)
+    finally:
+        svc.close()
+    # the priority-0 job (index 5) rode the first cohort of 2
+    assert 5 in order[:2], order
+
+
+# ---------------------------------------------------------------------------
+# Fault plan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_unknown_site():
+    with pytest.raises(ValueError):
+        FaultPlan(seed=1, not_a_site=1.0)
+
+
+def test_fault_plan_where_filter_and_count():
+    plan = FaultPlan(seed=3, dispatch={"p": 1.0, "count": 2,
+                                       "where": {"tier": "blocks"}})
+    with plan:
+        from repro.fleet import faults
+        assert faults.fire("dispatch", tier="superblock") is None
+        assert faults.fire("dispatch", tier="blocks") is not None
+        assert faults.fire("dispatch", tier="blocks") is not None
+        assert faults.fire("dispatch", tier="blocks") is None   # count cap
+    assert plan.injected["dispatch"] == 2
+    assert plan.encounters["dispatch"] == 3     # where-misses don't count
+
+
+def test_fault_plan_deterministic_across_runs():
+    def run(seed):
+        plan = FaultPlan(seed=seed, dispatch=0.3, compile=0.5)
+        with plan:
+            from repro.fleet import faults
+            pattern = []
+            for i in range(50):
+                pattern.append(faults.fire("dispatch", k=i) is not None)
+                pattern.append(faults.fire("compile", k=i) is not None)
+        return pattern, dict(plan.injected)
+
+    p1, i1 = run(17)
+    p2, i2 = run(17)
+    p3, _ = run(18)
+    assert p1 == p2 and i1 == i2
+    assert p1 != p3                      # seed actually matters
+
+
+# ---------------------------------------------------------------------------
+# Per-unit tier degradation (satellite: compile faults fall down the chain)
+# ---------------------------------------------------------------------------
+
+def _drain_with_plan(plan, datas, img, **sched_kw):
+    sched = FleetScheduler(CFG, batch_size=4, trace=True, **sched_kw)
+    hs = [sched.submit(img, d, tdx_dim=32) for d in datas]
+    with plan:
+        results = sched.drain()
+    return sched, [results[h] for h in hs]
+
+
+def test_compile_fault_at_superblock_degrades_to_blocks():
+    img = _loop_prog()
+    datas = _datas(4)
+    plan = FaultPlan(seed=1, compile={"p": 1.0, "count": 1,
+                                      "where": {"tier": "superblock"}})
+    sched, res = _drain_with_plan(plan, datas, img)
+    assert plan.injected["compile"] == 1
+    assert all(r.tier == "blocks" for r in res)     # next tier down
+    for r, ref in zip(res, _refs(img, datas)):
+        assert np.array_equal(r.shared_u32(), ref)  # bit-identical
+    assert sched.stats.degraded_units == 1
+    evs = [e for e in sched.tracer.events if e["name"] == "tier_degrade"]
+    assert evs and evs[0]["args"]["from_tier"] == "superblock"
+    assert evs[0]["args"]["to_tier"] == "blocks"
+    assert evs[0]["args"]["error"] == "InjectedFault"
+
+
+def test_compile_fault_at_both_tiers_degrades_to_interpreter():
+    img = _loop_prog()
+    datas = _datas(4)
+    plan = FaultPlan(seed=1, compile={"p": 1.0, "count": 2})
+    sched, res = _drain_with_plan(plan, datas, img)
+    assert plan.injected["compile"] == 2
+    assert all(r.tier == "interp" for r in res)
+    for r, ref in zip(res, _refs(img, datas)):
+        assert np.array_equal(r.shared_u32(), ref)
+    assert sched.stats.degraded_units == 2
+    tiers = [(e["args"]["from_tier"], e["args"]["to_tier"])
+             for e in sched.tracer.events if e["name"] == "tier_degrade"]
+    assert tiers == [("superblock", "blocks"), ("blocks", "interp")]
+
+
+def test_dispatch_fault_bisects_and_degrades_per_job():
+    """drain_isolated contains a poison dispatch: bisection isolates it,
+    the single survivor degrades down the tiers, and the cohort's other
+    jobs still deliver bit-identical results."""
+    img = _loop_prog()
+    datas = _datas(4)
+    sched = FleetScheduler(CFG, batch_size=4, trace=True)
+    hs = [sched.submit(img, d, tdx_dim=32) for d in datas]
+    plan = FaultPlan(seed=2, dispatch={"p": 1.0, "count": 1})
+    with plan:
+        results, failures = sched.drain_isolated()
+    assert not failures
+    assert sorted(results) == sorted(hs)
+    for h, d, ref in zip(hs, datas, _refs(img, datas)):
+        assert np.array_equal(results[h].shared_u32(), ref)
+    assert sched.stats.bisections >= 1
+    names = {e["name"] for e in sched.tracer.events}
+    assert "batch_bisect" in names and "fault_injected" in names
+
+
+def test_job_fails_structured_when_every_tier_fails():
+    """An unlimited dispatch fault defeats every tier and every retry:
+    the future resolves with JobError, the service stays alive."""
+    img = _loop_prog()
+    plan = FaultPlan(seed=4, dispatch=1.0)       # every dispatch, forever
+    svc = FleetService(CFG, batch_size=2, max_delay_s=0.001, faults=plan,
+                       max_retries=1, backoff_s=0.001)
+    try:
+        futs = [svc.submit(img, d) for d in _datas(2)]
+        errs = []
+        for f in futs:
+            with pytest.raises(JobError) as ei:
+                f.result(timeout=600)
+            errs.append(ei.value)
+    finally:
+        svc.close()
+    for e in errs:
+        assert e.kind == "error"
+        assert e.attempts == 2                   # initial + 1 retry
+        assert isinstance(e.cause, InjectedFault)
+    assert svc.stats.failed == 2
+    assert svc.stats.retries == 2
+
+
+def test_device_sync_hang_trips_watchdog_and_recovers():
+    img = _loop_prog()
+    datas = _datas(4)
+    # warm the compiled path first: the short watchdog below must race
+    # only the injected hang, never a cold multi-second XLA compile
+    sched = FleetScheduler(CFG, batch_size=4, compile_min=1,
+                           fixed_bucket=True)
+    sched.submit(img, datas[0], tdx_dim=32)
+    sched.drain()
+    plan = FaultPlan(seed=5,
+                     device_sync={"p": 1.0, "count": 1, "hang_s": 1.5})
+    svc = FleetService(CFG, batch_size=4, max_delay_s=0.001, faults=plan,
+                       dispatch_timeout_s=0.3, max_retries=2)
+    try:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in datas]
+        res = [f.result(timeout=600) for f in futs]
+    finally:
+        svc.close()
+    assert svc.stats.timeouts == 4               # the whole hung cohort
+    assert svc.stats.scheduler_resets == 1
+    for r, ref in zip(res, _refs(img, datas)):
+        assert np.array_equal(r.shared_u32(), ref)
+
+
+def test_residency_evict_fault_is_harmless():
+    img = _loop_prog()
+    datas = _datas(4)
+    sched = FleetScheduler(CFG, batch_size=4)
+    plan = FaultPlan(seed=6, residency_evict=1.0)
+    with plan:
+        hs = [sched.submit(img, d, tdx_dim=32) for d in datas]
+        r1 = sched.drain()
+        for d in datas:
+            sched.submit(img, d, tdx_dim=32)
+        sched.drain()
+    assert plan.injected["residency_evict"] >= 1
+    assert sched.stats.residency_hits == 0       # every lookup evicted
+    for h, ref in zip(hs, _refs(img, datas)):
+        assert np.array_equal(r1[h].shared_u32(), ref)
+
+
+def test_salvage_corruption_detected_and_reexecuted(monkeypatch):
+    """A salvaged result corrupted while stashed fails its delivery
+    checksum: it is dropped, its job re-executed, and the caller still
+    gets the right answer — corruption costs a re-run, never a wrong
+    result."""
+    from repro.core.blockc import CompiledProgram
+
+    img = _loop_prog()
+    datas = _datas(6)
+    sched = FleetScheduler(CFG, batch_size=2, trace=True)
+    hs = [sched.submit(img, d, tdx_dim=32) for d in datas]
+
+    calls = {"n": 0}
+    real = CompiledProgram.run_light_dev
+
+    def failing(self, shared, tdx):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected batch failure")
+        return real(self, shared, tdx)
+
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", failing)
+    plan = FaultPlan(seed=7, salvage_corrupt=1.0)
+    with plan:
+        with pytest.raises(RuntimeError):
+            sched.drain()                # stashes 2 results, corrupts 1
+    monkeypatch.setattr(CompiledProgram, "run_light_dev", real)
+    results = sched.drain()
+    assert sorted(results) == sorted(hs)
+    assert sched.stats.salvage_dropped == 1
+    assert sched.stats.salvaged_jobs == 1        # the intact stash only
+    for h, ref in zip(hs, _refs(img, datas)):
+        assert np.array_equal(results[h].shared_u32(), ref)
+    names = [e["name"] for e in sched.tracer.events]
+    assert "salvage_corrupt" in names
+
+
+# ---------------------------------------------------------------------------
+# Chaos soak + serve_jobs convenience
+# ---------------------------------------------------------------------------
+
+def test_chaos_soak_every_future_resolves_bit_identical():
+    img = _loop_prog()
+    datas = _datas(48)
+    refs = _refs(img, datas)
+    plan = FaultPlan(seed=23,
+                     compile={"p": 1.0, "count": 2},
+                     dispatch={"p": 1.0, "count": 2, "after": 1},
+                     residency_evict=0.2)
+    svc = FleetService(CFG, batch_size=8, max_delay_s=0.001, faults=plan,
+                       max_retries=3, backoff_s=0.001)
+    try:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in datas]
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(f.result(timeout=600))
+            except JobError as e:
+                outcomes.append(e)
+    finally:
+        svc.close()
+    assert len(outcomes) == len(datas)           # every future resolved
+    assert plan.total_injected() >= 3
+    for o, ref in zip(outcomes, refs):
+        if not isinstance(o, Exception):
+            assert np.array_equal(o.shared_u32(), ref)
+    assert not any(isinstance(o, Exception) for o in outcomes), \
+        "contained faults should salvage every job here"
+
+
+def test_serve_jobs_orders_outcomes_by_submission():
+    img = _loop_prog()
+    datas = _datas(6)
+    out = serve_jobs(CFG, [{"image": img, "shared_init": d, "tdx_dim": 32}
+                           for d in datas],
+                     batch_size=4, max_delay_s=0.001)
+    assert len(out) == 6
+    for o, ref in zip(out, _refs(img, datas)):
+        assert not isinstance(o, Exception)
+        assert np.array_equal(o.shared_u32(), ref)
+
+
+def test_traced_service_emits_request_pairs_and_serve_events():
+    from repro.obs import report as report_mod
+
+    img = _loop_prog()
+    datas = _datas(4)
+    plan = FaultPlan(seed=9, compile={"p": 1.0, "count": 1})
+    svc = FleetService(CFG, batch_size=4, max_delay_s=0.001, trace=True,
+                       faults=plan)
+    try:
+        futs = [svc.submit(img, d) for d in datas]
+        for f in futs:
+            f.result(timeout=300)
+    finally:
+        svc.close()
+    events = svc.tracer.events
+    req = report_mod.job_latencies(events, name="request")
+    assert len(req) == 4 and all(v >= 0 for v in req.values())
+    srv = report_mod.serve_events(events)
+    assert srv.get("fault:fault_injected", 0) >= 1
+    assert srv.get("serve:tier_degrade", 0) >= 1
+    text = report_mod.render(events)
+    assert "request latency" in text
+    assert "serving / fault events" in text
