@@ -80,6 +80,15 @@ def _fleet_metrics(rows: list) -> dict[str, float]:
             m["fleet/residency_speedup"] = row["residency_speedup"]
         elif "speedup" in row:
             m[f"fleet/vmapped_{row['mix']}_speedup"] = row["speedup"]
+        elif row.get("kind") == "serve" and row.get("mode") == "clean":
+            # clean-run serving p99, tracked inverted (1000/p99_ms) so
+            # compare()'s lower-is-regression convention applies; the
+            # "p99" in the name selects the wider latency slack
+            p99 = row.get("p99_ms", 0.0)
+            if p99 > 0:
+                rate = int(row.get("rate_jobs_per_sec", 0))
+                m[f"fleet/serve_clean_p99_inv_{rate}"] = round(
+                    1000.0 / p99, 3)
     return m
 
 
@@ -115,13 +124,18 @@ def compare(
             continue
         cur = current[name]
         ratio = cur / base if base else float("inf")
+        # latency percentiles carry scheduling jitter the throughput
+        # ratios don't: a tail-latency metric gets a wider band so the
+        # trend catches sustained regressions without flapping on one
+        # slow runner
+        limit = max(max_regress, 0.5) if "p99" in name else max_regress
         status = "OK"
-        if ratio < 1.0 - max_regress:
+        if ratio < 1.0 - limit:
             status = "REGRESSED"
             failures.append(
                 f"{name}: {base} -> {cur} "
                 f"({(1.0 - ratio) * 100:.1f}% worse, limit "
-                f"{max_regress * 100:.0f}%)"
+                f"{limit * 100:.0f}%)"
             )
         print(f"{status:>9}  {name}: baseline={base} current={cur} "
               f"(x{ratio:.2f})")

@@ -20,6 +20,7 @@ import contextlib
 import json
 import os
 import sys
+import threading
 import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -211,17 +212,46 @@ def _chaos_plan(seed: int = 11) -> FaultPlan:
                      device_sync={"p": 1.0, "count": 1, "hang_s": 1.0})
 
 
+def _downsample(series: list, limit: int = 64) -> list:
+    """Thin a sampled series to at most ``limit`` points (keeps ends)."""
+    if len(series) <= limit:
+        return series
+    step = (len(series) - 1) / (limit - 1)
+    return [series[round(i * step)] for i in range(limit)]
+
+
 def _serve_once(cfg, jobs, batch: int, rate: float,
-                faults: FaultPlan | None) -> dict:
+                faults: FaultPlan | None, *, telemetry: bool = True,
+                blackbox_dir: str | None = None) -> dict:
     """One open-loop serving run: submissions arrive on a fixed-rate
     clock (independent of completions — queueing shows up as latency,
     exactly what a closed loop would hide), every future's resolve time
-    is captured by callback, and *every* future must resolve."""
+    is captured by callback, and *every* future must resolve.  With
+    telemetry on, a sampler thread polls the service's registry at
+    ~25ms for the queue-depth and SLO-burn time series."""
     svc = FleetService(cfg, batch, max_delay_s=0.002, max_retries=3,
                        backoff_s=0.002,
                        dispatch_timeout_s=0.5 if faults else None,
-                       faults=faults)
+                       faults=faults, telemetry=telemetry,
+                       blackbox_dir=blackbox_dir,
+                       slo_latency_s=0.1, slo_window_s=10.0)
     n = len(jobs)
+    samples: list[dict] = []
+    stop = threading.Event()
+
+    def sample_loop():
+        while not stop.is_set():
+            snap = svc.metrics.snapshot()
+            samples.append({
+                "t_s": round(time.monotonic() - t0, 3),
+                "queue_depth": snap.value("serve_queue_depth"),
+                "rejected": snap.total("serve_rejected_total"),
+                "slo_burn": round(svc.slo_status(snap)["burn"], 3),
+            })
+            stop.wait(0.025)
+
+    sampler = (threading.Thread(target=sample_loop, daemon=True)
+               if telemetry else None)
     done_t = [0.0] * n
     sub_t = [0.0] * n
     outcomes: list = [None] * n
@@ -233,6 +263,8 @@ def _serve_once(cfg, jobs, batch: int, rate: float,
         return _cb
 
     t0 = time.monotonic()
+    if sampler is not None:
+        sampler.start()
     for i, b in enumerate(jobs):
         target = t0 + i / rate
         delay = target - time.monotonic()
@@ -244,12 +276,21 @@ def _serve_once(cfg, jobs, batch: int, rate: float,
         f.add_done_callback(cb(i))
     svc.close()                           # waits for the queue to drain
     wall = time.monotonic() - t0
+    if sampler is not None:
+        stop.set()
+        sampler.join(2.0)
     assert all(o is not None for o in outcomes), \
         "every submitted future must resolve"
     lat = sorted((d - s) * 1e3 for d, s in zip(done_t, sub_t))
     p = lambda q: lat[min(n - 1, int(q * n))]
     st = svc.stats
-    return {
+    # always-on invariant: the exported counters ARE the stats — the
+    # final snapshot and the views can never disagree
+    snap = st.final_snapshot
+    assert snap.total("serve_failed_total") == st.failed
+    assert snap.total("serve_submitted_total") == st.submitted
+    assert snap.total("serve_retries_total") == st.retries
+    row = {
         "kind": "serve",
         "mode": "chaos" if faults else "clean",
         "rate_jobs_per_sec": rate,
@@ -258,15 +299,28 @@ def _serve_once(cfg, jobs, batch: int, rate: float,
         "p99_ms": round(p(0.99), 3),
         "achieved_jobs_per_sec": round(n / wall, 1),
         "failed": st.failed, "retries": st.retries,
+        "rejected": st.rejected,
         "timeouts": st.timeouts,
         "scheduler_resets": st.scheduler_resets,
         "faults_injected": dict(faults.injected) if faults else {},
         "_outcomes": outcomes,            # stripped before json
     }
+    if telemetry:
+        slo = snap.meta.get("slo", {})
+        row["slo"] = {k: slo.get(k) for k in
+                      ("request_p99_s", "job_p99_s", "burn",
+                       "window_requests")}
+        row["series"] = _downsample(samples)
+        row["queue_depth_peak"] = max(
+            (s["queue_depth"] for s in samples), default=0)
+        row["blackbox_dumps"] = (list(svc.recorder.dumps)
+                                 if svc.recorder else [])
+    return row
 
 
 def bench_serve(cfg, batch: int = 32, n_jobs: int = 512,
-                rates: tuple = (1000.0, 4000.0), seed: int = 11) -> list[dict]:
+                rates: tuple = (1000.0, 4000.0), seed: int = 11,
+                blackbox_dir: str | None = None) -> list[dict]:
     """Open-loop serving latency, clean and under the chaos plan.
 
     The chaos run's non-failed results are asserted bit-identical to a
@@ -297,7 +351,8 @@ def bench_serve(cfg, batch: int = 32, n_jobs: int = 512,
     rows = []
     for rate in rates:
         for faults in (None, _chaos_plan(seed)):
-            row = _serve_once(cfg, jobs, batch, rate, faults)
+            row = _serve_once(cfg, jobs, batch, rate, faults,
+                              blackbox_dir=blackbox_dir)
             outcomes = row.pop("_outcomes")
             n_res = 0
             for i, o in enumerate(outcomes):
@@ -345,17 +400,32 @@ def serve_smoke(batch: int = 16, n_jobs: int = 64) -> None:
         f"service p99 {best_p99:.3f}s exceeds 2x drain {drain_s:.3f}s"
 
 
-def chaos_smoke(batch: int = 16, n_jobs: int = 96, seed: int = 11) -> None:
-    """CI gate: a seeded chaos run where every future resolves and all
-    non-failed results match the fault-free ground truth bit-for-bit."""
+def chaos_smoke(batch: int = 16, n_jobs: int = 96, seed: int = 11,
+                blackbox_dir: str | None = None) -> None:
+    """CI gate: a seeded chaos run where every future resolves, all
+    non-failed results match the fault-free ground truth bit-for-bit,
+    and the flight recorder produced at least one loadable blackbox
+    dump (``blackbox_dir`` puts the dumps somewhere CI can upload)."""
     cfg = fleet_config()
-    rows = bench_serve(cfg, batch, n_jobs, rates=(2000.0,), seed=seed)
+    rows = bench_serve(cfg, batch, n_jobs, rates=(2000.0,), seed=seed,
+                       blackbox_dir=blackbox_dir)
     chaos = [r for r in rows if r["mode"] == "chaos"][0]
     assert sum(chaos["faults_injected"].values()) > 0, "no faults fired"
+    dumps = chaos.get("blackbox_dumps", [])
+    assert dumps, "a chaos run with a watchdog hang must dump a blackbox"
+    for path in dumps:
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("traceEvents"), f"empty blackbox {path}"
+        assert doc["otherData"]["tool"] == "repro.obs.recorder", path
     print(f"chaos-smoke: {chaos['jobs']} jobs, injected "
           f"{chaos['faults_injected']}, failed {chaos['failed']}, "
           f"retries {chaos['retries']}, "
-          f"{chaos['verified_bit_identical']} bit-identical")
+          f"{chaos['verified_bit_identical']} bit-identical, "
+          f"queue peak {chaos.get('queue_depth_peak')}, "
+          f"slo burn {chaos.get('slo', {}).get('burn')}")
+    for path in dumps:
+        print(f"# blackbox dump: {path}", file=sys.stderr)
 
 
 def bench(batch: int = 32, rounds: int = 8, repeats: int = 2,
@@ -384,6 +454,9 @@ def main() -> None:
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="CI gate: seeded chaos run, every future "
                          "resolves, results bit-identical")
+    ap.add_argument("--blackbox-dir", default=None, metavar="DIR",
+                    help="where chaos-run flight-recorder dumps land "
+                         "(CI uploads them as artifacts)")
     ap.add_argument("--json", default=os.path.join(_REPO_ROOT,
                                                    "BENCH_fleet.json"))
     ap.add_argument("--trace", default=None, metavar="OUT.json",
@@ -394,7 +467,9 @@ def main() -> None:
         serve_smoke()
         return
     if args.chaos_smoke:
-        chaos_smoke()
+        if args.blackbox_dir:
+            os.makedirs(args.blackbox_dir, exist_ok=True)
+        chaos_smoke(blackbox_dir=args.blackbox_dir)
         return
     if args.smoke:
         args.rounds, args.repeats, args.mixes = 1, 1, "light"
@@ -413,7 +488,9 @@ def main() -> None:
                   f"{r['p50_ms'] * 1e3:.1f},"
                   f"p99_ms={r['p99_ms']};"
                   f"jobs_per_sec={r['achieved_jobs_per_sec']};"
-                  f"failed={r['failed']};retries={r['retries']}")
+                  f"failed={r['failed']};retries={r['retries']};"
+                  f"queue_peak={r.get('queue_depth_peak', 0)};"
+                  f"slo_burn={r.get('slo', {}).get('burn')}")
             continue
         if "residency_speedup" in r:
             print(f"fleet/resident_{r['mix']}_{r['batch']},"
@@ -434,6 +511,9 @@ def main() -> None:
     print(f"# best speedup at batch {args.batch}: {best}x", file=sys.stderr)
     if args.smoke:
         return              # CI pass: don't clobber the tracked numbers
+    for r in rows:          # dump *paths* are transient tmp dirs: keep
+        if isinstance(r.get("blackbox_dumps"), list):   # only the count
+            r["blackbox_dumps"] = len(r["blackbox_dumps"])
     with open(args.json, "w") as f:
         json.dump(rows, f, indent=2)
     print(f"# wrote {args.json}", file=sys.stderr)

@@ -30,12 +30,14 @@ from .engine import ResidencyCache, fleet_run, stack_states, unstack_state
 from .faults import FAULT_SITES, FaultPlan, FaultSpec, InjectedFault
 from .scheduler import (FleetJob, FleetScheduler, FleetStats, JobResult,
                         check_job)
-from .service import AdmissionError, FleetService, JobError, ServiceStats
+from .service import (AdmissionError, FleetService, JobError, ServiceStats,
+                      register_serve_metrics)
 
 __all__ = [
     "Fleet", "run_jobs", "serve_jobs", "fleet_run", "stack_states",
     "unstack_state", "FleetJob", "FleetScheduler", "FleetStats",
     "JobResult", "ResidencyCache", "check_job",
     "FleetService", "ServiceStats", "JobError", "AdmissionError",
+    "register_serve_metrics",
     "FaultPlan", "FaultSpec", "InjectedFault", "FAULT_SITES",
 ]

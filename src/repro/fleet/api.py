@@ -19,6 +19,7 @@ from typing import Any
 from ..core.assembler import ProgramImage
 from ..core.blockc import TierPolicy
 from ..core.config import EGPUConfig
+from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from .scheduler import FleetScheduler, FleetStats, JobResult
 from .service import FleetService
@@ -52,7 +53,8 @@ class Fleet:
                  use_compiler: bool = True, compile_min: int = 2,
                  tier_policy: TierPolicy | None = None,
                  residency_max: int = 32,
-                 trace: bool | str | obs_trace.Tracer | None = None):
+                 trace: bool | str | obs_trace.Tracer | None = None,
+                 metrics: obs_metrics.MetricsRegistry | None = None):
         self._sched = FleetScheduler(cfg, batch_size,
                                      pack_by_cost=pack_by_cost,
                                      validate=validate,
@@ -60,7 +62,7 @@ class Fleet:
                                      compile_min=compile_min,
                                      tier_policy=tier_policy,
                                      residency_max=residency_max,
-                                     trace=trace)
+                                     trace=trace, metrics=metrics)
 
     @property
     def cfg(self) -> EGPUConfig:
@@ -82,6 +84,12 @@ class Fleet:
     def tracer(self) -> obs_trace.Tracer | None:
         """The fleet's own tracer (``trace=`` knob), or ``None``."""
         return self._sched.tracer
+
+    @property
+    def metrics(self) -> obs_metrics.MetricsRegistry:
+        """The fleet's metrics registry (``stats`` is a view over it);
+        ``metrics.to_prometheus()`` exports it."""
+        return self._sched.stats.registry
 
     def save_trace(self, path: str) -> None:
         """Write the fleet tracer's Chrome/Perfetto trace JSON."""

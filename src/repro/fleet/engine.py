@@ -40,6 +40,7 @@ from ..core.config import EGPUConfig
 from ..core.executor import make_step, pad_image, padded_length
 from ..core.isa import Op
 from ..core.machine import MachineState, init_state
+from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from . import faults
 
@@ -192,7 +193,9 @@ def _fleet_exec(runner, progs, states):
     exe = _FLEET_EXECS.get(key)
     if exe is not None:
         _FLEET_EXECS.move_to_end(key)
+        obs_metrics.inc("fleet_compile_cache_total", result="hit")
         return exe, 0.0
+    obs_metrics.inc("fleet_compile_cache_total", result="miss")
     t0 = time.perf_counter()
     with obs_trace.span("compile", kind="fleet_runner",
                         batch=progs.shape[0], prog_len=progs.shape[1]):
@@ -246,12 +249,19 @@ def fleet_run(images: list[ProgramImage],
     exe, compile_s = _fleet_exec(runner, progs, states)
     if timings is not None:
         timings["compile_s"] = compile_s
+    t_disp = time.perf_counter()
     with obs_trace.span("dispatch", cores=len(images), prog_len=length):
         faults.maybe_raise("dispatch", tier="interp", cores=len(images))
         out = exe(progs, states)
+    t_sync = time.perf_counter()
     with obs_trace.span("device_sync"):
         hang = faults.hang_seconds("device_sync", tier="interp")
         if hang:
             time.sleep(hang)
         out.cycles.block_until_ready()
+    t_done = time.perf_counter()
+    obs_metrics.observe("fleet_dispatch_seconds", t_sync - t_disp,
+                        tier="interp")
+    obs_metrics.observe("fleet_device_sync_seconds", t_done - t_sync,
+                        tier="interp")
     return out

@@ -47,6 +47,8 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 
 __all__ = [
@@ -162,7 +164,12 @@ class FaultPlan:
                 return None
             self.injected[site] += 1
             self.log.append({"site": site, "n": self.injected[site], **info})
+        # the trace event also lands in the ambient flight recorder;
+        # the counter and the blackbox dump make every injection
+        # observable in always-on production telemetry too
         obs_trace.event("fault_injected", cat="fault", site=site, **info)
+        obs_metrics.inc("serve_faults_injected_total", fault_site=site)
+        obs_recorder.trigger(f"fault_{site}", fault_site=site, **info)
         return spec
 
     def total_injected(self) -> int:

@@ -42,6 +42,8 @@ from ..core.config import EGPUConfig
 from ..core.executor import padded_length
 from ..core.machine import MachineState
 from ..obs import counters as obs_counters
+from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from ..obs.counters import EventCounters
 from . import faults
@@ -81,6 +83,13 @@ class DrainCancelled(RuntimeError):
     drain this way so the orphaned thread stops at the next unit
     boundary instead of grinding through (and cold-compiling for) the
     rest of the queue nobody will read."""
+
+
+def _prog_digest(image: ProgramImage) -> str:
+    """Short content digest of a program — the ``program`` metric
+    label (bounded cardinality: one value per distinct program)."""
+    return hashlib.blake2b(program_key(image),
+                           digest_size=4).hexdigest()
 
 
 def _result_checksum(res: "JobResult") -> bytes:
@@ -149,51 +158,174 @@ class JobResult:
                 for c in isa.OpClass}
 
 
-@dataclasses.dataclass
-class FleetStats:
-    """Aggregate counters across every drain of a scheduler."""
+def _int_view(doc):
+    """A FleetStats/ServiceStats int field backed by registry counters."""
+    def deco(fn):
+        def get(self):
+            return int(round(fn(self)))
+        get.__doc__ = doc
+        return property(get)
+    return deco
 
-    jobs: int = 0
-    batches: int = 0
-    pad_slots: int = 0
-    total_cycles: int = 0
-    total_steps: int = 0
-    #: wall time of batch *execution* (input build + dispatch + sync +
-    #: collect); one-time compile cost is split into ``compile_s``
-    wall_s: float = 0.0
-    #: host/XLA compile seconds (block compiles, light-path and fleet
-    #: runner XLA compiles) — kept out of ``wall_s`` so warm-vs-cold
-    #: throughput comparisons measure execution, not compilation
-    compile_s: float = 0.0
-    compiled_jobs: int = 0       # jobs run on either compiled tier
-    compiled_batches: int = 0
-    superblock_jobs: int = 0     # ... of which on the superblock tier
-    superblock_batches: int = 0
-    #: compiled-tier batches whose device-resident inputs were replayed
-    #: (zero host->device transfer) vs rebuilt-and-transferred
-    residency_hits: int = 0
-    residency_misses: int = 0
-    #: results computed by a failed drain and delivered by a later one —
-    #: already counted in ``jobs``/``wall_s`` when computed, so a
-    #: per-drain consumer can subtract them instead of double-dipping
-    salvaged_jobs: int = 0
-    #: units that fell down the tier chain (superblock -> blocks ->
-    #: interpreter) after a compile or dispatch failure, instead of
-    #: failing the drain
-    degraded_units: int = 0
-    #: failing batches split in half by the isolated drain so one
-    #: poison job cannot starve its cohort
-    bisections: int = 0
-    #: stashed salvaged results that failed their delivery checksum
-    #: (corrupted while waiting) — dropped and re-executed, never served
-    salvage_dropped: int = 0
+
+class FleetStats:
+    """Aggregate counters across every drain of a scheduler.
+
+    Since the always-on telemetry PR these are **views over a
+    ** :class:`~repro.obs.metrics.MetricsRegistry` — the registry is
+    the single source of truth (one store feeds the Prometheus
+    exporter, the snapshot API, and these fields), and because the
+    serving watchdog hands the *same* registry to every replacement
+    scheduler, service-lifetime totals cannot drift from per-drain
+    counts.  Every pre-existing field is kept as a read property, so
+    no caller changes.
+    """
+
+    def __init__(self, registry: obs_metrics.MetricsRegistry | None
+                 = None):
+        self.registry = (registry if registry is not None
+                         else obs_metrics.MetricsRegistry())
+        register_fleet_metrics(self.registry)
+
+    def _t(self, name, **labels):
+        return self.registry.total(name, **labels)
+
+    @_int_view("jobs executed (each counted once, when its batch runs)")
+    def jobs(self):
+        return self._t("fleet_jobs_total")
+
+    @_int_view("batches dispatched, all tiers")
+    def batches(self):
+        return self._t("fleet_batches_total")
+
+    @_int_view("filler lanes across all batches")
+    def pad_slots(self):
+        return self._t("fleet_pad_slots_total")
+
+    @_int_view("architectural cycles across all jobs")
+    def total_cycles(self):
+        return self._t("fleet_cycles_total")
+
+    @_int_view("instructions executed across all jobs")
+    def total_steps(self):
+        return self._t("fleet_steps_total")
+
+    @property
+    def wall_s(self) -> float:
+        """Wall time of batch *execution* (input build + dispatch +
+        sync + collect); one-time compile cost is split into
+        ``compile_s``."""
+        return self._t("fleet_wall_seconds_total")
+
+    @property
+    def compile_s(self) -> float:
+        """Host/XLA compile seconds (block compiles, light-path and
+        fleet runner XLA compiles) — kept out of ``wall_s`` so
+        warm-vs-cold throughput comparisons measure execution, not
+        compilation."""
+        return self._t("fleet_compile_seconds_total")
+
+    @_int_view("jobs run on either compiled tier")
+    def compiled_jobs(self):
+        return (self._t("fleet_jobs_total", tier="blocks")
+                + self._t("fleet_jobs_total", tier="superblock"))
+
+    @_int_view("batches run on either compiled tier")
+    def compiled_batches(self):
+        return (self._t("fleet_batches_total", tier="blocks")
+                + self._t("fleet_batches_total", tier="superblock"))
+
+    @_int_view("jobs run on the superblock tier")
+    def superblock_jobs(self):
+        return self._t("fleet_jobs_total", tier="superblock")
+
+    @_int_view("batches run on the superblock tier")
+    def superblock_batches(self):
+        return self._t("fleet_batches_total", tier="superblock")
+
+    @_int_view("compiled-tier batches replayed from device-resident "
+               "inputs (zero host->device transfer)")
+    def residency_hits(self):
+        return self._t("fleet_residency_lookups_total", result="hit")
+
+    @_int_view("compiled-tier batches rebuilt and transferred")
+    def residency_misses(self):
+        return self._t("fleet_residency_lookups_total", result="miss")
+
+    @_int_view("results computed by a failed drain and delivered by a "
+               "later one — already counted in jobs/wall_s when "
+               "computed, so a per-drain consumer can subtract them "
+               "instead of double-dipping")
+    def salvaged_jobs(self):
+        return self._t("fleet_salvaged_jobs_total")
+
+    @_int_view("units that fell down the tier chain (superblock -> "
+               "blocks -> interpreter) after a compile or dispatch "
+               "failure, instead of failing the drain")
+    def degraded_units(self):
+        return self._t("fleet_degraded_units_total")
+
+    @_int_view("failing batches split in half by the isolated drain "
+               "so one poison job cannot starve its cohort")
+    def bisections(self):
+        return self._t("fleet_bisections_total")
+
+    @_int_view("stashed salvaged results that failed their delivery "
+               "checksum — dropped and re-executed, never served")
+    def salvage_dropped(self):
+        return self._t("fleet_salvage_dropped_total")
 
     @property
     def jobs_per_sec(self) -> float:
         """Aggregate throughput over every batch actually *run*: each
         job is counted exactly once, when its batch executes — delivery
         of salvaged results adds neither jobs nor wall time."""
-        return self.jobs / self.wall_s if self.wall_s else 0.0
+        wall = self.wall_s
+        return self.jobs / wall if wall else 0.0
+
+    def __repr__(self) -> str:
+        return (f"FleetStats(jobs={self.jobs}, batches={self.batches}, "
+                f"wall_s={self.wall_s:.4f}, "
+                f"compile_s={self.compile_s:.4f}, "
+                f"compiled_jobs={self.compiled_jobs}, "
+                f"superblock_jobs={self.superblock_jobs})")
+
+
+def register_fleet_metrics(reg: obs_metrics.MetricsRegistry) -> None:
+    """Declare the fleet-layer metric families (idempotent) so help
+    text and label sets exist even before the first increment."""
+    reg.counter("fleet_jobs_total",
+                "jobs executed, by tier and program digest",
+                ("tier", "program"))
+    reg.counter("fleet_batches_total",
+                "batches dispatched, by tier and program digest",
+                ("tier", "program"))
+    reg.counter("fleet_pad_slots_total", "filler lanes padded in")
+    reg.counter("fleet_cycles_total", "architectural cycles retired")
+    reg.counter("fleet_steps_total", "instructions executed")
+    reg.counter("fleet_wall_seconds_total",
+                "batch execution wall time (compile excluded)")
+    reg.counter("fleet_compile_seconds_total",
+                "host + XLA compile seconds")
+    reg.counter("fleet_residency_lookups_total",
+                "device-resident input lookups", ("result",))
+    reg.counter("fleet_compile_cache_total",
+                "light-path XLA compile cache lookups", ("result",))
+    reg.counter("fleet_salvaged_jobs_total",
+                "salvaged results delivered by a later drain")
+    reg.counter("fleet_salvage_dropped_total",
+                "salvaged results dropped on checksum mismatch")
+    reg.counter("fleet_degraded_units_total",
+                "units degraded down the tier chain",
+                ("from_tier", "to_tier"))
+    reg.counter("fleet_bisections_total",
+                "failing batches bisected by the isolated drain")
+    reg.histogram("fleet_dispatch_seconds",
+                  "XLA dispatch wall per compiled-tier batch",
+                  ("tier",))
+    reg.histogram("fleet_device_sync_seconds",
+                  "device sync wall per compiled-tier batch",
+                  ("tier",))
 
 
 def _batch_init_state(cfg: EGPUConfig, jobs: list[FleetJob]) -> MachineState:
@@ -271,7 +403,8 @@ class FleetScheduler:
                  use_compiler: bool = True, compile_min: int = 2,
                  tier_policy: TierPolicy | None = None,
                  residency_max: int = 32, fixed_bucket: bool = False,
-                 trace: bool | str | obs_trace.Tracer | None = None):
+                 trace: bool | str | obs_trace.Tracer | None = None,
+                 metrics: obs_metrics.MetricsRegistry | None = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         #: ``trace=True`` records every drain into ``self.tracer``;
@@ -305,7 +438,11 @@ class FleetScheduler:
         #: shape per program: the serving default
         #: (:class:`repro.fleet.service.FleetService`).
         self.fixed_bucket = fixed_bucket
-        self.stats = FleetStats()
+        #: ``metrics=`` shares one registry across schedulers (the
+        #: serving watchdog passes the service's registry to every
+        #: replacement scheduler so lifetime totals never reset)
+        self.stats = FleetStats(metrics)
+        self._m = self.stats.registry
         self._queue: list[FleetJob] = []
         self._next_handle = 0
         self._filler_image: ProgramImage | None = None
@@ -358,6 +495,15 @@ class FleetScheduler:
         tr = obs_trace.current_tracer()
         return tr if tr is not None else self.tracer
 
+    def _event(self, name: str, cat: str = "event", **args) -> None:
+        """An anomaly/decision event: always into the ambient flight
+        recorder (bounded ring, so failures ship with context), and
+        into the tracer when one is installed."""
+        obs_recorder.record(name, cat=cat, **args)
+        tr = self._trace()
+        if tr is not None:
+            tr.event(name, cat=cat, **args)
+
     @property
     def pending(self) -> int:
         return len(self._queue)
@@ -403,14 +549,9 @@ class FleetScheduler:
             if cp is None:
                 rest.extend(group)
                 continue
-            tr = self._trace()
-            if tr is not None:
-                tr.event("tier_group",
-                         program=hashlib.blake2b(
-                             program_key(cp.image),
-                             digest_size=4).hexdigest(),
-                         jobs=len(group), threads=cp.threads,
-                         batch_hint=hint, tier=cp.mode)
+            self._event("tier_group", program=_prog_digest(cp.image),
+                        jobs=len(group), threads=cp.threads,
+                        batch_hint=hint, tier=cp.mode)
             compiled.append((cp, group))
         return compiled, rest
 
@@ -432,15 +573,18 @@ class FleetScheduler:
                                      validate=self.validate,
                                      policy=self.tier_policy,
                                      batch_hint=hint, mode=mode)
-                self.stats.compile_s += time.perf_counter() - t0
+                self._m.inc("fleet_compile_seconds_total",
+                            time.perf_counter() - t0)
                 tried = cp.mode
                 faults.maybe_raise("compile", tier=cp.mode)
                 return cp
             except BlockCompileError:
-                self.stats.compile_s += time.perf_counter() - t0
+                self._m.inc("fleet_compile_seconds_total",
+                            time.perf_counter() - t0)
                 return None           # uncompilable: interpreter tier
             except Exception as e:
-                self.stats.compile_s += time.perf_counter() - t0
+                self._m.inc("fleet_compile_seconds_total",
+                            time.perf_counter() - t0)
                 # "blocks" already failed (either auto picked it, or
                 # this was the forced-blocks retry): end of the chain
                 if mode == "blocks" or tried == "blocks":
@@ -451,12 +595,11 @@ class FleetScheduler:
 
     def _degrade(self, from_tier: str, to_tier: str, jobs: int,
                  err: Exception | None) -> None:
-        self.stats.degraded_units += 1
-        tr = self._trace()
-        if tr is not None:
-            tr.event("tier_degrade", cat="serve", from_tier=from_tier,
-                     to_tier=to_tier, jobs=jobs,
-                     error=type(err).__name__ if err else "")
+        self._m.inc("fleet_degraded_units_total",
+                    from_tier=from_tier, to_tier=to_tier)
+        self._event("tier_degrade", cat="serve", from_tier=from_tier,
+                    to_tier=to_tier, jobs=jobs,
+                    error=type(err).__name__ if err else "")
 
     def _collect(self, final: MachineState, batch: list[FleetJob],
                  real: int, wall: float,
@@ -469,10 +612,8 @@ class FleetScheduler:
         hv = np.asarray(final.hazard_violations)
         stat_c = np.asarray(final.stat_cycles)
         stat_i = np.asarray(final.stat_instrs)
-        self.stats.batches += 1
-        self.stats.pad_slots += len(batch) - real
-        self.stats.wall_s += wall
         tr = self._trace()
+        sum_cycles = sum_steps = 0
         for i, job in enumerate(batch[:real]):
             res = JobResult(
                 handle=job.handle, tag=job.tag, cycles=int(cycles[i]),
@@ -486,9 +627,16 @@ class FleetScheduler:
                 tr.async_end("job", id=job.handle, cycles=res.cycles,
                              tier="interp")
             results[job.handle] = res
-            self.stats.jobs += 1
-            self.stats.total_cycles += res.cycles
-            self.stats.total_steps += res.steps
+            sum_cycles += res.cycles
+            sum_steps += res.steps
+        # one registry pass per batch, not per job (hot path)
+        m = self._m
+        m.inc("fleet_batches_total", tier="interp", program="mixed")
+        m.inc("fleet_jobs_total", real, tier="interp", program="mixed")
+        m.inc("fleet_pad_slots_total", len(batch) - real)
+        m.inc("fleet_wall_seconds_total", wall)
+        m.inc("fleet_cycles_total", sum_cycles)
+        m.inc("fleet_steps_total", sum_steps)
 
     def _job_counters(self, job: FleetJob) -> EventCounters | None:
         """Event counters for an interpreter-tier job (tracing only):
@@ -554,11 +702,9 @@ class FleetScheduler:
         if faults.fire("residency_evict") is not None:
             self._residency.clear()      # must be a miss, never an error
         arrays, hit = self._residency.lookup(key, cp, build)
-        if hit:
-            self.stats.residency_hits += 1
-        else:
-            self.stats.residency_misses += 1
-        return arrays
+        self._m.inc("fleet_residency_lookups_total",
+                    result="hit" if hit else "miss")
+        return arrays, hit
 
     def _collect_light(self, cp, shared_dev, batch: list[FleetJob],
                        real: int, wall: float,
@@ -577,9 +723,6 @@ class FleetScheduler:
         steps = int(sim.steps)
         hv = int(sim.violations)         # already 0 under validate=False
         time_us = self.cfg.cycles_to_us(cycles)
-        self.stats.batches += 1
-        self.stats.pad_slots += len(batch) - real
-        self.stats.wall_s += wall
         counters = cp.event_counters()   # baked once, shared per program
         tr = self._trace()
         for i, job in enumerate(batch[:real]):
@@ -591,9 +734,15 @@ class FleetScheduler:
             if tr is not None:
                 tr.async_end("job", id=job.handle, cycles=cycles,
                              tier=cp.mode)
-            self.stats.jobs += 1
-            self.stats.total_cycles += cycles
-            self.stats.total_steps += steps
+        # one registry pass per batch, not per job (hot path)
+        prog = _prog_digest(cp.image)
+        m = self._m
+        m.inc("fleet_batches_total", tier=cp.mode, program=prog)
+        m.inc("fleet_jobs_total", real, tier=cp.mode, program=prog)
+        m.inc("fleet_pad_slots_total", len(batch) - real)
+        m.inc("fleet_wall_seconds_total", wall)
+        m.inc("fleet_cycles_total", cycles * real)
+        m.inc("fleet_steps_total", steps * real)
 
     def _run_compiled_unit(self, cp, chunk: list[FleetJob],
                            results: dict[int, JobResult]) -> None:
@@ -607,31 +756,35 @@ class FleetScheduler:
                 pad = size - real
                 chunk = chunk + chunk[:1] * pad   # same-program filler
             t0 = time.perf_counter()
-            hits0 = self.stats.residency_hits
             with obs_trace.span("residency") as rsp:
-                shared_dev, tdx_dev = self._resident_inputs(cp, chunk)
+                (shared_dev, tdx_dev), res_hit = \
+                    self._resident_inputs(cp, chunk)
             if rsp.active:
-                rsp.set(hit=self.stats.residency_hits > hits0)
+                rsp.set(hit=res_hit)
             # split one-time XLA compilation out of the timed dispatch
             compile_s = cp.light_compile(shared_dev, tdx_dev)
-            self.stats.compile_s += compile_s
+            self._m.inc("fleet_compile_seconds_total", compile_s)
+            self._m.inc("fleet_compile_cache_total",
+                        result="miss" if compile_s else "hit")
+            t_disp = time.perf_counter()
             with obs_trace.span("dispatch", cores=size):
                 faults.maybe_raise("dispatch", tier=cp.mode, cores=size)
                 shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev)
+            t_sync = time.perf_counter()
             with obs_trace.span("device_sync"):
                 hang = faults.hang_seconds("device_sync", tier=cp.mode)
                 if hang:
                     time.sleep(hang)
                 shared_out.block_until_ready()
+            t_done = time.perf_counter()
+            self._m.observe("fleet_dispatch_seconds",
+                            t_sync - t_disp, tier=cp.mode)
+            self._m.observe("fleet_device_sync_seconds",
+                            t_done - t_sync, tier=cp.mode)
             wall = time.perf_counter() - t0 - compile_s
             with obs_trace.span("collect"):
                 self._collect_light(cp, shared_out, chunk, real, wall,
                                     results)
-            self.stats.compiled_jobs += real
-            self.stats.compiled_batches += 1
-            if cp.mode == "superblock":
-                self.stats.superblock_jobs += real
-                self.stats.superblock_batches += 1
 
     def _run_interp_unit(self, batch: list[FleetJob],
                          results: dict[int, JobResult]) -> None:
@@ -647,7 +800,8 @@ class FleetScheduler:
             final = fleet_run([j.image for j in batch], states,
                               validate=self.validate, timings=timings)
             # one-time XLA compile cost, split out of execution wall
-            self.stats.compile_s += timings["compile_s"]
+            self._m.inc("fleet_compile_seconds_total",
+                        timings["compile_s"])
             wall = time.perf_counter() - t0 - timings["compile_s"]
             with obs_trace.span("collect"):
                 self._collect(final, batch, real, wall, results)
@@ -680,10 +834,14 @@ class FleetScheduler:
         return self._drain_traced(isolate=True)
 
     def _drain_traced(self, isolate: bool):
-        if self.tracer is None:
-            return self._drain(isolate)
-        with self.tracer:                # install for nested spans
-            out = self._drain(isolate)
+        # the registry rides the ambient contextvar through the drain
+        # so leaf code (engine dispatch walls, runner-cache lookups,
+        # fault sites) reports without signature plumbing
+        with self._m.installed():
+            if self.tracer is None:
+                return self._drain(isolate)
+            with self.tracer:            # install for nested spans
+                out = self._drain(isolate)
         if self._trace_path is not None:
             self.tracer.save(self._trace_path)
         return out
@@ -702,10 +860,8 @@ class FleetScheduler:
         for h, r in self._salvaged.items():
             job = self._salvage_jobs.get(h)
             if _result_checksum(r) != self._salvage_sums.get(h):
-                self.stats.salvage_dropped += 1
-                tr = self._trace()
-                if tr is not None:
-                    tr.event("salvage_corrupt", cat="serve", handle=h)
+                self._m.inc("fleet_salvage_dropped_total")
+                self._event("salvage_corrupt", cat="serve", handle=h)
                 if job is not None:
                     dropped.append(job)
                 continue
@@ -758,10 +914,9 @@ class FleetScheduler:
         tier = cp.mode if cp is not None else "interp"
         tr = self._trace()
         if len(jobs) > 1:
-            self.stats.bisections += 1
-            if tr is not None:
-                tr.event("batch_bisect", cat="serve", jobs=len(jobs),
-                         tier=tier, error=type(err).__name__)
+            self._m.inc("fleet_bisections_total")
+            self._event("batch_bisect", cat="serve", jobs=len(jobs),
+                        tier=tier, error=type(err).__name__)
             mid = len(jobs) // 2
             self._run_unit_isolated(cp, jobs[:mid], results, failures)
             self._run_unit_isolated(cp, jobs[mid:], results, failures)
@@ -773,9 +928,9 @@ class FleetScheduler:
             return
         job = jobs[0]
         failures[job.handle] = err
+        self._event("job_failed", cat="serve", handle=job.handle,
+                    tier=tier, error=type(err).__name__)
         if tr is not None:
-            tr.event("job_failed", cat="serve", handle=job.handle,
-                     tier=tier, error=type(err).__name__)
             tr.async_end("job", id=job.handle,
                          error=type(err).__name__)
 
@@ -863,5 +1018,6 @@ class FleetScheduler:
         # salvaged results were computed (and counted into jobs/wall_s/
         # tier splits) by the drain that ran them; delivery only marks
         # them so per-drain consumers don't double-dip the timing
-        self.stats.salvaged_jobs += n_salvaged
+        if n_salvaged:
+            self._m.inc("fleet_salvaged_jobs_total", n_salvaged)
         return results, failures

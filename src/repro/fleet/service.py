@@ -58,11 +58,14 @@ from typing import Any
 from ..core.assembler import ProgramImage
 from ..core.blockc import TierPolicy
 from ..core.config import EGPUConfig
+from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from . import faults as faults_mod
 from .scheduler import FleetScheduler, JobResult, check_job
 
-__all__ = ["FleetService", "ServiceStats", "JobError", "AdmissionError"]
+__all__ = ["FleetService", "ServiceStats", "JobError", "AdmissionError",
+           "register_serve_metrics"]
 
 
 class JobError(Exception):
@@ -73,15 +76,20 @@ class JobError(Exception):
     out), ``"error"`` (failed on every tier and every retry),
     ``"shutdown"`` (service closed without draining).  ``attempts`` is
     how many dispatches the job consumed; ``cause`` the last underlying
-    exception (``None`` for deadline/shutdown)."""
+    exception (``None`` for deadline/shutdown).  ``recent_events`` is
+    the flight recorder's tail for this ticket's cohort (the ticket's
+    own records plus id-less context: dispatches, resets, faults) so a
+    chaos failure is self-explaining without a full trace."""
 
     def __init__(self, kind: str, *, ticket: int = -1, attempts: int = 0,
-                 detail: str = "", cause: Exception | None = None):
+                 detail: str = "", cause: Exception | None = None,
+                 recent_events: list | None = None):
         self.kind = kind
         self.ticket = ticket
         self.attempts = attempts
         self.detail = detail
         self.cause = cause
+        self.recent_events = list(recent_events or [])
         msg = f"job {ticket} failed ({kind}) after {attempts} attempt(s)"
         if detail:
             msg += f": {detail}"
@@ -112,26 +120,129 @@ class _Ticket:
     future: Future
     attempts: int = 0
     not_before: float = 0.0          # backoff gate
+    dispatch_t: float = 0.0          # last dispatch, for job latency
 
 
-@dataclasses.dataclass
+def register_serve_metrics(reg: obs_metrics.MetricsRegistry,
+                           window_s: float = 60.0) -> None:
+    """Declare the serving-layer metric families (idempotent).
+    ``window_s`` sets the rolling-SLO window on the latency
+    histograms; the first registration of a family wins."""
+    reg.counter("serve_submitted_total", "jobs admitted", ("priority",))
+    reg.counter("serve_completed_total",
+                "futures resolved with a JobResult", ("tier",))
+    reg.counter("serve_failed_total",
+                "futures resolved with a JobError", ("kind",))
+    reg.counter("serve_rejected_total",
+                "AdmissionError raised at submit")
+    reg.counter("serve_retries_total",
+                "re-queues after a failed attempt", ("kind",))
+    reg.counter("serve_dispatches_total",
+                "cohorts handed to the scheduler")
+    reg.counter("serve_dispatched_jobs_total",
+                "jobs across all dispatched cohorts")
+    reg.counter("serve_scheduler_resets_total",
+                "schedulers abandoned (hang/crash)", ("reason",))
+    reg.counter("serve_watchdog_jobs_total",
+                "jobs in cohorts abandoned by the dispatch watchdog")
+    reg.counter("serve_faults_injected_total",
+                "FaultPlan injections observed", ("fault_site",))
+    reg.gauge("serve_queue_depth", "jobs queued, not yet dispatched")
+    reg.gauge("serve_pending_cost", "summed cost of queued jobs")
+    reg.gauge("serve_inflight_cost", "summed cost of dispatched jobs")
+    reg.histogram("serve_request_latency_seconds",
+                  "submit -> future-resolution latency", ("outcome",),
+                  window_s=window_s)
+    reg.histogram("serve_job_latency_seconds",
+                  "dispatch -> future-resolution latency",
+                  window_s=window_s)
+    reg.histogram("serve_cohort_size", "jobs per dispatched cohort",
+                  buckets=obs_metrics.SIZE_BUCKETS)
+
+
 class ServiceStats:
-    """Aggregate serving counters (monotonic across the service life)."""
+    """Aggregate serving counters (monotonic across the service life).
 
-    submitted: int = 0
-    completed: int = 0
-    failed: int = 0                  # futures resolved with JobError
-    rejected: int = 0                # AdmissionError raised at submit
-    deadline_misses: int = 0         # failed with kind="deadline"
-    timeouts: int = 0                # dispatch watchdog firings (jobs)
-    retries: int = 0                 # re-queues after a failed attempt
-    dispatches: int = 0              # cohorts handed to the scheduler
-    dispatched_jobs: int = 0
-    scheduler_resets: int = 0        # schedulers abandoned (hang/crash)
+    Views over the service's
+    :class:`~repro.obs.metrics.MetricsRegistry` — the registry is the
+    single source of truth (it also feeds the Prometheus exporter and
+    :class:`~repro.obs.metrics.MetricsSnapshot`), so these fields, the
+    exported counters, and per-drain scheduler stats can never drift
+    apart.  Field names and semantics are unchanged from the dataclass
+    this replaces.
+    """
+
+    def __init__(self, registry: obs_metrics.MetricsRegistry | None
+                 = None):
+        self.registry = (registry if registry is not None
+                         else obs_metrics.MetricsRegistry())
+        register_serve_metrics(self.registry)
+        #: set by :meth:`FleetService.close`: the final
+        #: :class:`~repro.obs.metrics.MetricsSnapshot` of the service
+        self.final_snapshot: obs_metrics.MetricsSnapshot | None = None
+        #: ... and the most recent flight-recorder blackbox dump path
+        #: (``None`` when the service never dumped)
+        self.blackbox_path: str | None = None
+
+    def _t(self, name, **labels):
+        return int(round(self.registry.total(name, **labels)))
+
+    @property
+    def submitted(self) -> int:
+        return self._t("serve_submitted_total")
+
+    @property
+    def completed(self) -> int:
+        return self._t("serve_completed_total")
+
+    @property
+    def failed(self) -> int:
+        """Futures resolved with JobError."""
+        return self._t("serve_failed_total")
+
+    @property
+    def rejected(self) -> int:
+        """AdmissionError raised at submit."""
+        return self._t("serve_rejected_total")
+
+    @property
+    def deadline_misses(self) -> int:
+        """Failed with kind="deadline"."""
+        return self._t("serve_failed_total", kind="deadline")
+
+    @property
+    def timeouts(self) -> int:
+        """Dispatch watchdog firings (jobs)."""
+        return self._t("serve_watchdog_jobs_total")
+
+    @property
+    def retries(self) -> int:
+        """Re-queues after a failed attempt."""
+        return self._t("serve_retries_total")
+
+    @property
+    def dispatches(self) -> int:
+        """Cohorts handed to the scheduler."""
+        return self._t("serve_dispatches_total")
+
+    @property
+    def dispatched_jobs(self) -> int:
+        return self._t("serve_dispatched_jobs_total")
+
+    @property
+    def scheduler_resets(self) -> int:
+        """Schedulers abandoned (hang/crash)."""
+        return self._t("serve_scheduler_resets_total")
 
     @property
     def resolved(self) -> int:
         return self.completed + self.failed
+
+    def __repr__(self) -> str:
+        return (f"ServiceStats(submitted={self.submitted}, "
+                f"completed={self.completed}, failed={self.failed}, "
+                f"rejected={self.rejected}, retries={self.retries}, "
+                f"scheduler_resets={self.scheduler_resets})")
 
 
 class FleetService:
@@ -163,7 +274,15 @@ class FleetService:
                  pack_by_cost: bool = True, validate: bool = True,
                  use_compiler: bool = True, compile_min: int = 1,
                  tier_policy: TierPolicy | None = None,
-                 residency_max: int = 32, fixed_bucket: bool = True):
+                 residency_max: int = 32, fixed_bucket: bool = True,
+                 telemetry: bool = True,
+                 metrics: obs_metrics.MetricsRegistry | None = None,
+                 recorder: obs_recorder.FlightRecorder | None = None,
+                 recorder_capacity: int = 4096,
+                 blackbox_dir: str | None = None,
+                 slo_latency_s: float | None = None,
+                 slo_target: float = 0.99,
+                 slo_window_s: float = 60.0):
         if admission not in ("block", "reject"):
             raise ValueError("admission must be 'block' or 'reject'")
         if batch_size < 1:
@@ -180,7 +299,30 @@ class FleetService:
         self.max_pending = max_pending
         self.admission = admission
         self.faults = faults
-        self.stats = ServiceStats()
+        #: ``telemetry=False`` strips the optional instrumentation
+        #: (latency histograms, gauges, flight recorder) — the baseline
+        #: side of the CI overhead gate.  The registry itself stays:
+        #: its counters ARE the stats store.
+        self._tm = bool(telemetry)
+        self.slo_latency_s = slo_latency_s
+        self.slo_target = slo_target
+        self.slo_window_s = slo_window_s
+        #: one registry for the service's whole life — every watchdog
+        #: replacement scheduler writes into it, so lifetime totals and
+        #: per-drain counts cannot drift
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.MetricsRegistry())
+        register_serve_metrics(self.metrics, window_s=slo_window_s)
+        #: always-on bounded ring of recent events, dumped as a
+        #: Perfetto blackbox on watchdog reset / retry exhaustion /
+        #: injected fault
+        self.recorder: obs_recorder.FlightRecorder | None = None
+        if self._tm:
+            self.recorder = (recorder if recorder is not None
+                             else obs_recorder.FlightRecorder(
+                                 recorder_capacity,
+                                 blackbox_dir=blackbox_dir))
+        self.stats = ServiceStats(self.metrics)
 
         self.tracer: obs_trace.Tracer | None = None
         self._trace_path: str | None = None
@@ -206,7 +348,8 @@ class FleetService:
                               compile_min=compile_min,
                               tier_policy=tier_policy,
                               residency_max=residency_max,
-                              fixed_bucket=fixed_bucket)
+                              fixed_bucket=fixed_bucket,
+                              metrics=self.metrics)
         self._sched = self._make_sched()
 
         self._lock = threading.Lock()
@@ -225,6 +368,23 @@ class FleetService:
     def _make_sched(self) -> FleetScheduler:
         return FleetScheduler(self.cfg, self.batch_size,
                               trace=self.tracer, **self._sched_kw)
+
+    def _event(self, name: str, cat: str = "serve", **args) -> None:
+        """A serving event: into the flight recorder (always on) and
+        the tracer (when installed)."""
+        if self.recorder is not None:
+            self.recorder.record(name, cat=cat, **args)
+        if self.tracer is not None:
+            self.tracer.event(name, cat=cat, **args)
+
+    def _update_gauges(self) -> None:
+        """Queue-shape gauges; caller holds the lock."""
+        if not self._tm:
+            return
+        m = self.metrics
+        m.set_gauge("serve_queue_depth", len(self._queue))
+        m.set_gauge("serve_pending_cost", self._pending_cost)
+        m.set_gauge("serve_inflight_cost", self._inflight_cost)
 
     # ----------------------------------------------------------- intake
     @property
@@ -268,11 +428,9 @@ class FleetService:
                 raise RuntimeError("service is closed")
             while self._over_budget(cost):
                 if self.admission == "reject":
-                    self.stats.rejected += 1
-                    if self.tracer is not None:
-                        self.tracer.event("admission_reject", cat="serve",
-                                          cost=cost,
-                                          load=self._load_cost())
+                    self.metrics.inc("serve_rejected_total")
+                    self._event("admission_reject", cost=cost,
+                                load=self._load_cost())
                     raise AdmissionError(
                         f"admission budget exceeded (load "
                         f"{self._load_cost():.0f} + job {cost:.0f} > "
@@ -291,9 +449,11 @@ class FleetService:
                         deadline=None if deadline_s is None
                         else now + deadline_s,
                         future=Future())
-            self.stats.submitted += 1
+            self.metrics.inc("serve_submitted_total",
+                             priority=priority)
             self._pending_cost += cost
             self._queue.append(t)
+            self._update_gauges()
             self._work.notify_all()
         if self.tracer is not None:
             self.tracer.async_begin("request", id=tid,
@@ -304,11 +464,16 @@ class FleetService:
     def _loop(self) -> None:
         with contextlib.ExitStack() as stack:
             # a fresh thread has a fresh context: install the service's
-            # tracer and fault plan for everything the dispatcher runs
+            # tracer, fault plan, flight recorder and metrics registry
+            # for everything the dispatcher runs (drain threads inherit
+            # via contextvars.copy_context)
             if self.tracer is not None:
                 stack.enter_context(self.tracer)
             if self.faults is not None:
                 stack.enter_context(self.faults)
+            if self.recorder is not None:
+                stack.enter_context(self.recorder.installed())
+            stack.enter_context(self.metrics.installed())
             while True:
                 expired, cohort = [], []
                 with self._work:
@@ -343,6 +508,7 @@ class FleetService:
                             for t in cohort:
                                 self._pending_cost -= t.cost
                                 self._inflight_cost += t.cost
+                            self._update_gauges()
                         else:
                             self._work.wait(self._next_wake(now))
                             continue
@@ -369,8 +535,16 @@ class FleetService:
         return max(1e-4, nxt - now)
 
     def _dispatch(self, cohort: list[_Ticket]) -> None:
-        self.stats.dispatches += 1
-        self.stats.dispatched_jobs += len(cohort)
+        m = self.metrics
+        m.inc("serve_dispatches_total")
+        m.inc("serve_dispatched_jobs_total", len(cohort))
+        now = time.monotonic()
+        if self._tm:
+            m.observe("serve_cohort_size", len(cohort))
+            self._event("dispatch", jobs=len(cohort),
+                        queued=self.pending)
+        for t in cohort:
+            t.dispatch_t = now
         sched = self._sched
         try:
             handle2t = {
@@ -388,8 +562,9 @@ class FleetService:
                 self._retry_or_fail(t, "error", e)
             return
         if out is None:                  # watchdog fired: hung dispatch
-            self._reset_sched("dispatch_timeout", None)
-            self.stats.timeouts += len(cohort)
+            self._reset_sched("dispatch_timeout", None,
+                              jobs=len(cohort))
+            self.metrics.inc("serve_watchdog_jobs_total", len(cohort))
             for t in cohort:
                 self._retry_or_fail(t, "timeout", None)
             return
@@ -428,23 +603,42 @@ class FleetService:
             raise box["err"]
         return box["out"]
 
-    def _reset_sched(self, why: str, err: Exception | None) -> None:
-        self.stats.scheduler_resets += 1
-        if self.tracer is not None:
-            self.tracer.event(why, cat="serve",
-                              error=type(err).__name__ if err else "")
+    def _reset_sched(self, why: str, err: Exception | None,
+                     **info) -> None:
+        self.metrics.inc("serve_scheduler_resets_total", reason=why)
+        self._event(why, error=type(err).__name__ if err else "",
+                    **info)
+        # the blackbox: the ring's last ~N events are exactly the
+        # context a post-mortem of a hung/crashed scheduler needs
+        if self.recorder is not None:
+            path = self.recorder.dump(
+                why, error=type(err).__name__ if err else "", **info)
+            if path is not None:
+                self.stats.blackbox_path = path
         self._sched = self._make_sched()
 
     # ------------------------------------------------------- resolution
     def _release(self, t: _Ticket) -> None:
         with self._work:
             self._inflight_cost -= t.cost
+            self._update_gauges()
             self._work.notify_all()
+
+    def _observe_latency(self, t: _Ticket, outcome: str) -> None:
+        if not self._tm:
+            return
+        now = time.monotonic()
+        self.metrics.observe("serve_request_latency_seconds",
+                             now - t.submit_t, outcome=outcome)
+        if t.dispatch_t:
+            self.metrics.observe("serve_job_latency_seconds",
+                                 now - t.dispatch_t)
 
     def _complete(self, t: _Ticket, res: JobResult) -> None:
         t.attempts += 1
         self._release(t)
-        self.stats.completed += 1
+        self.metrics.inc("serve_completed_total", tier=res.tier)
+        self._observe_latency(t, "ok")
         if self.tracer is not None:
             self.tracer.async_end("request", id=t.tid, tier=res.tier,
                                   attempts=t.attempts)
@@ -463,31 +657,39 @@ class FleetService:
             return
         delay = self.backoff_s * self.backoff_factor ** (t.attempts - 1)
         t.not_before = now + delay
-        self.stats.retries += 1
-        if self.tracer is not None:
-            self.tracer.event("job_retry", cat="serve", id=t.tid,
-                              attempts=t.attempts, kind=kind,
-                              backoff_s=round(delay, 6))
+        self.metrics.inc("serve_retries_total", kind=kind)
+        self._event("job_retry", id=t.tid, attempts=t.attempts,
+                    kind=kind, backoff_s=round(delay, 6))
         with self._work:
             self._inflight_cost -= t.cost
             self._pending_cost += t.cost
             t.enqueue_t = now
             self._queue.append(t)
+            self._update_gauges()
             self._work.notify_all()
 
     def _fail(self, t: _Ticket, kind: str, *,
               cause: Exception | None = None, detail: str = "") -> None:
         self._release(t)
-        self.stats.failed += 1
-        if kind == "deadline":
-            self.stats.deadline_misses += 1
+        self.metrics.inc("serve_failed_total", kind=kind)
+        self._observe_latency(t, "error")
+        self._event("job_failed", id=t.tid, kind=kind,
+                    attempts=t.attempts)
         if self.tracer is not None:
-            self.tracer.event("job_failed", cat="serve", id=t.tid,
-                              kind=kind, attempts=t.attempts)
             self.tracer.async_end("request", id=t.tid, error=kind)
+        recent: list = []
+        if self.recorder is not None:
+            # retry exhaustion is a production failure worth a blackbox
+            # (deadline misses and shutdown drops are normal shedding)
+            if kind in ("error", "timeout"):
+                path = self.recorder.dump("retry_exhausted",
+                                          ticket=t.tid, kind=kind)
+                if path is not None:
+                    self.stats.blackbox_path = path
+            recent = self.recorder.recent_for(t.tid)
         t.future.set_exception(JobError(
             kind, ticket=t.tid, attempts=t.attempts, detail=detail,
-            cause=cause))
+            cause=cause, recent_events=recent))
 
     # --------------------------------------------------------- shutdown
     def close(self, wait: bool = True,
@@ -517,6 +719,51 @@ class FleetService:
         self._abandoned = [th for th in self._abandoned if th.is_alive()]
         if self._trace_path is not None and self.tracer is not None:
             self.tracer.save(self._trace_path)
+        # flush the service's final telemetry into the stats object so
+        # a closed service remains fully inspectable (and the blackbox
+        # path survives the recorder)
+        snap = self.metrics.snapshot()
+        snap.meta["slo"] = self.slo_status(snap)
+        if self.recorder is not None and self.recorder.dumps:
+            self.stats.blackbox_path = self.recorder.dumps[-1]
+            snap.meta["blackbox_path"] = self.stats.blackbox_path
+        self.stats.final_snapshot = snap
+
+    def slo_status(self, snapshot: obs_metrics.MetricsSnapshot | None
+                   = None) -> dict:
+        """Rolling-window latency percentiles and error-budget burn.
+
+        ``burn`` (present when ``slo_latency_s`` is set) counts a
+        request as *bad* when it resolved with an error — however fast
+        — or completed slower than ``slo_latency_s``; the rate is the
+        bad fraction over the window divided by the budget
+        ``1 - slo_target`` (1.0 = burning exactly at budget).
+        """
+        snap = snapshot if snapshot is not None \
+            else self.metrics.snapshot()
+        name = "serve_request_latency_seconds"
+        out = {
+            "window_s": self.slo_window_s,
+            "request_p50_s": snap.percentile(name, 0.50, window=True),
+            "request_p99_s": snap.percentile(name, 0.99, window=True),
+            "job_p50_s": snap.percentile(
+                "serve_job_latency_seconds", 0.50, window=True),
+            "job_p99_s": snap.percentile(
+                "serve_job_latency_seconds", 0.99, window=True),
+            "lifetime_request_p99_s": snap.percentile(name, 0.99),
+        }
+        if self.slo_latency_s is not None:
+            total = snap.hist_count(name, window=True)
+            good = snap.count_le(name, self.slo_latency_s,
+                                 window=True, outcome="ok")
+            bad_frac = (1.0 - good / total) if total else 0.0
+            out.update(
+                slo_latency_s=self.slo_latency_s,
+                slo_target=self.slo_target,
+                window_requests=total,
+                window_good=good,
+                burn=bad_frac / max(1e-9, 1.0 - self.slo_target))
+        return out
 
     def save_trace(self, path: str) -> None:
         """Write the service tracer's Chrome/Perfetto trace JSON."""

@@ -1,15 +1,37 @@
 """Observability for the soft-GPU stack: tracing, event counters,
-tier-decision logging, and a Chrome/Perfetto trace exporter.
+always-on serving metrics, a flight recorder, and Chrome/Perfetto
+exporters.
 
-Zero overhead when disabled; results are bit-identical with tracing on
-or off.  See :mod:`repro.obs.trace` for the span API,
-:mod:`repro.obs.counters` for the counter definitions, and
-``python -m repro.obs.report trace.json`` for the offline summarizer.
+Two regimes, one discipline (results bit-identical either way):
+
+* **Deep tracing** (:mod:`repro.obs.trace`) records everything and is
+  therefore zero-overhead-when-*off* — install a :class:`Tracer`
+  around the slice of work you are debugging.
+* **Always-on telemetry** (:mod:`repro.obs.metrics`,
+  :mod:`repro.obs.recorder`) is bounded-overhead-when-*on*: a
+  thread-safe :class:`MetricsRegistry` (counters / gauges / windowed
+  histograms, Prometheus text exporter) and a :class:`FlightRecorder`
+  ring buffer that dumps a Perfetto "blackbox" on failure.  The
+  serving stack keeps both installed for its whole life.
+
+``python -m repro.obs.report trace.json`` summarizes traces and
+blackbox dumps; ``python -m repro.obs.report --metrics snap.json``
+renders a metrics snapshot.
 """
 from .trace import NULL_SPAN, Tracer, current_tracer, event, span
 from .counters import EventCounters, aggregate
+from .metrics import (
+    DEFAULT_TIME_BUCKETS,
+    MetricsRegistry,
+    MetricsSnapshot,
+    current_registry,
+)
+from .recorder import FlightRecorder, current_recorder
 
 __all__ = [
     "Tracer", "span", "event", "current_tracer", "NULL_SPAN",
     "EventCounters", "aggregate",
+    "MetricsRegistry", "MetricsSnapshot", "DEFAULT_TIME_BUCKETS",
+    "current_registry",
+    "FlightRecorder", "current_recorder",
 ]

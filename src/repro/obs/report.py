@@ -12,6 +12,12 @@ Reads a Chrome trace-event JSON written by
   feature values and the first rule that fired;
 * **job latency** — submit -> deliver percentiles from the async pairs.
 
+``--metrics snapshot.json`` switches to the telemetry view: counters,
+gauges, histogram percentiles (lifetime and rolling-window), and the
+SLO status a :class:`~repro.obs.metrics.MetricsSnapshot` embeds in its
+``meta`` (a snapshot file is auto-detected by its ``kind`` field, so
+the flag is optional).
+
 Every section is also available as a plain function for programmatic
 use (the obs benchmark gates on :func:`coverage`).
 """
@@ -20,6 +26,8 @@ from __future__ import annotations
 import argparse
 import json
 from typing import Any
+
+from .metrics import MetricsSnapshot, _fmt
 
 
 def load(path: str) -> list[dict]:
@@ -242,14 +250,91 @@ def render(events: list[dict]) -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Metrics-snapshot rendering
+# ---------------------------------------------------------------------------
+
+def _fmt_s(seconds: float | None) -> str:
+    if seconds is None:
+        return "-"
+    return _fmt_us(seconds * 1e6)
+
+
+def render_metrics(snap: MetricsSnapshot) -> str:
+    """Human-readable view of a :class:`MetricsSnapshot`: counters and
+    gauges (per label set), histogram percentiles (lifetime and, when a
+    rolling window was configured, windowed), and the embedded SLO
+    status from ``meta``."""
+    lines: list[str] = []
+
+    scalars = [m for m in snap.metrics if m["type"] in ("counter", "gauge")]
+    if scalars:
+        lines.append("== counters / gauges ==")
+        for m in sorted(scalars, key=lambda m: m["name"]):
+            for s in m["samples"]:
+                lab = ",".join(f"{k}={v}"
+                               for k, v in sorted(s["labels"].items()))
+                tag = f"{m['name']}{{{lab}}}" if lab else m["name"]
+                lines.append(f"  {tag:<56} {_fmt(s['value']):>12}")
+
+    hists = [m for m in snap.metrics if m["type"] == "histogram"]
+    for m in sorted(hists, key=lambda m: m["name"]):
+        lines.append("")
+        lines.append(f"== {m['name']} ==")
+        for s in m["samples"]:
+            lab = ",".join(f"{k}={v}"
+                           for k, v in sorted(s["labels"].items()))
+            flt = dict(s["labels"])
+            n = s["count"]
+            mean = s["sum"] / n if n else 0.0
+            row = (f"  {{{lab}}}" if lab else "  (all)")
+            row = (f"{row:<36} n={n:<8} mean {_fmt_s(mean):>9} "
+                   f"p50 {_fmt_s(snap.percentile(m['name'], .5, **flt)):>9}"
+                   f" p99 "
+                   f"{_fmt_s(snap.percentile(m['name'], .99, **flt)):>9}")
+            if "window" in s:
+                wn = s["window"]["count"]
+                wp99 = snap.percentile(m["name"], .99, window=True, **flt)
+                row += (f"  | window({_fmt(s['window']['span_s'])}s) "
+                        f"n={wn} p99 {_fmt_s(wp99)}")
+            lines.append(row)
+
+    slo = snap.meta.get("slo")
+    if slo:
+        lines.append("")
+        lines.append("== SLO status ==")
+        for k in sorted(slo):
+            v = slo[k]
+            if (k.endswith("_s") and isinstance(v, float)
+                    and k not in ("window_s", "slo_latency_s")):
+                v = _fmt_s(v)            # latency keys read best scaled
+            lines.append(f"  {k:<24} {v}")
+    for k, v in sorted(snap.meta.items()):
+        if k != "slo":
+            lines.append(f"  meta.{k}: {v}")
+    return "\n".join(lines)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
-        description="Summarize a repro.obs Chrome/Perfetto trace.")
+        description="Summarize a repro.obs Chrome/Perfetto trace or "
+                    "metrics snapshot.")
     ap.add_argument("trace", help="trace JSON written with --trace / "
-                                  "Tracer.save()")
+                                  "Tracer.save(), or a metrics snapshot "
+                                  "written with MetricsSnapshot.save()")
+    ap.add_argument("--metrics", action="store_true",
+                    help="force the metrics-snapshot view (auto-detected "
+                         "from the file's kind field otherwise)")
     args = ap.parse_args(argv)
-    print(render(load(args.trace)))
+    with open(args.trace) as f:
+        doc = json.load(f)
+    is_snap = args.metrics or (
+        isinstance(doc, dict) and doc.get("kind") == "repro.obs.metrics")
+    if is_snap:
+        print(render_metrics(MetricsSnapshot.from_json(doc)))
+    else:
+        print(render(doc["traceEvents"] if isinstance(doc, dict) else doc))
     return 0
 
 

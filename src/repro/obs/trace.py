@@ -37,6 +37,8 @@ import threading
 import time
 from typing import Any
 
+from . import recorder as _recorder
+
 __all__ = [
     "Tracer", "span", "event", "current_tracer", "NULL_SPAN",
 ]
@@ -72,13 +74,16 @@ NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    """One live span: records ``[enter, exit)`` as a complete event."""
+    """One live span: records ``[enter, exit)`` as a complete event in
+    the tracer and/or the flight recorder (whichever are installed)."""
 
-    __slots__ = ("_tr", "_name", "_args", "_t0")
+    __slots__ = ("_tr", "_rec", "_name", "_args", "_t0")
     active = True
 
-    def __init__(self, tr: "Tracer", name: str, args: dict):
+    def __init__(self, tr: "Tracer | None", name: str, args: dict,
+                 rec=None):
         self._tr = tr
+        self._rec = rec
         self._name = name
         self._args = args
 
@@ -89,13 +94,17 @@ class _Span:
     def __exit__(self, *exc):
         t1 = time.perf_counter_ns()
         tr = self._tr
-        tr._events.append({
-            "name": self._name, "cat": "span", "ph": "X",
-            "ts": (self._t0 - tr._t0) / 1e3,
-            "dur": (t1 - self._t0) / 1e3,
-            "pid": tr._pid, "tid": tr._tid(),
-            "args": self._args,
-        })
+        if tr is not None:
+            tr._events.append({
+                "name": self._name, "cat": "span", "ph": "X",
+                "ts": (self._t0 - tr._t0) / 1e3,
+                "dur": (t1 - self._t0) / 1e3,
+                "pid": tr._pid, "tid": tr._tid(),
+                "args": self._args,
+            })
+        if self._rec is not None:
+            self._rec.record_span(self._name, self._t0, t1,
+                                  args=self._args)
         return False
 
     def set(self, **args):
@@ -215,20 +224,26 @@ def _jsonable(x: Any):
 
 
 def span(name: str, **args):
-    """A span against the current tracer; a shared no-op when disabled.
+    """A span against the current tracer and/or flight recorder; a
+    shared no-op when neither is installed.
 
-    The disabled path is one contextvar read and a ``None`` check —
+    The disabled path is two contextvar reads and ``None`` checks —
     callers building expensive span arguments should gate on
     ``sp.active`` (or :func:`current_tracer`) instead of precomputing.
     """
     tr = _TRACER.get()
-    if tr is None:
+    rec = _recorder.current_recorder()
+    if tr is None and rec is None:
         return NULL_SPAN
-    return tr.span(name, **args)
+    return _Span(tr, name, args, rec=rec)
 
 
 def event(name: str, cat: str = "event", **args) -> None:
-    """An instant event against the current tracer; no-op when disabled."""
+    """An instant event against the current tracer and/or flight
+    recorder; no-op when neither is installed."""
     tr = _TRACER.get()
     if tr is not None:
         tr.event(name, cat=cat, **args)
+    rec = _recorder.current_recorder()
+    if rec is not None:
+        rec.record(name, cat=cat, **args)

@@ -1,0 +1,483 @@
+"""Telemetry tests: the metrics registry (thread safety, histogram
+percentile math, rolling windows, snapshot/Prometheus round-trips), the
+flight recorder (ring boundedness, blackbox dumps), stats-as-views over
+the registry, bit-identity with telemetry on/off across all three
+tiers, and the chaos path that turns a watchdog reset into a loadable
+blackbox."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Asm, EGPUConfig, run_program
+from repro.core import machine as machine_mod
+from repro.core.blockc import TierPolicy
+from repro.fleet import (FaultPlan, FleetScheduler, FleetService, JobError)
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import (DEFAULT_TIME_BUCKETS, MetricsRegistry,
+                               MetricsSnapshot)
+from repro.obs.recorder import FlightRecorder
+
+CFG = EGPUConfig(max_threads=64, regs_per_thread=32, shared_kb=4,
+                 predicate_levels=4, has_dot=True, has_invsqr=True)
+
+
+def _loop_prog(iters=16):
+    a = Asm(CFG)
+    a.tdx(1)
+    a.lod(2, 1, 0)
+    with a.loop(iters):
+        a.fadd(2, 2, 2)
+    a.sto(2, 1, 0)
+    a.stop()
+    return a.assemble(threads_active=32)
+
+
+def _datas(n, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(32).astype(np.float32) for _ in range(n)]
+
+
+def _refs(img, datas):
+    return [machine_mod.shared_as_u32(
+        run_program(img, shared_init=d, tdx_dim=32)) for d in datas]
+
+
+# ---------------------------------------------------------------------------
+# Registry primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics_and_errors():
+    reg = MetricsRegistry()
+    reg.inc("a_total", 2)
+    reg.inc("a_total")
+    assert reg.value("a_total") == 3
+    with pytest.raises(ValueError):
+        reg.inc("a_total", -1)                   # counters are monotonic
+    reg.set_gauge("g", 7)
+    reg.set_gauge("g", 3)
+    assert reg.value("g") == 3
+    with pytest.raises(ValueError):
+        reg.gauge("a_total")                     # kind conflict
+    reg.counter("b_total", labelnames=("x",))
+    with pytest.raises(ValueError):
+        reg.counter("b_total", labelnames=("y",))   # labelname conflict
+    with pytest.raises(ValueError):
+        reg.inc("b_total")                       # missing label value
+
+
+def test_label_totals_and_filters():
+    reg = MetricsRegistry()
+    reg.inc("jobs_total", 3, tier="interp", program="p0")
+    reg.inc("jobs_total", 4, tier="blocks", program="p0")
+    reg.inc("jobs_total", 5, tier="blocks", program="p1")
+    assert reg.total("jobs_total") == 12
+    assert reg.total("jobs_total", tier="blocks") == 9
+    assert reg.total("jobs_total", tier="blocks", program="p1") == 5
+    assert reg.total("jobs_total", tier="nope") == 0
+    assert reg.total("missing_total") == 0
+
+
+def test_registry_thread_safety_exact_counts():
+    reg = MetricsRegistry()
+    reg.counter("c_total", labelnames=("w",))
+    reg.histogram("h_seconds")
+    n_threads, n_iter = 8, 500
+
+    def work(w):
+        for i in range(n_iter):
+            reg.inc("c_total", w=w)              # per-thread child
+            reg.inc("c_total", w="all")          # contended child
+            reg.observe("h_seconds", 0.001 * (i % 7 + 1))
+
+    ths = [threading.Thread(target=work, args=(str(k),))
+           for k in range(n_threads)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert reg.total("c_total", w="all") == n_threads * n_iter
+    assert reg.total("c_total") == 2 * n_threads * n_iter
+    snap = reg.snapshot()
+    assert snap.hist_count("h_seconds") == n_threads * n_iter
+
+
+def _bucket_span(v):
+    lo = 0.0
+    for edge in DEFAULT_TIME_BUCKETS:
+        if v <= edge:
+            return edge - lo
+        lo = edge
+    return DEFAULT_TIME_BUCKETS[-1]
+
+
+def test_histogram_percentiles_vs_exact():
+    reg = MetricsRegistry()
+    rng = np.random.default_rng(11)
+    vals = rng.uniform(0.001, 0.5, 500)
+    for v in vals:
+        reg.observe("lat_seconds", float(v))
+    snap = reg.snapshot()
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(vals, q))
+        est = snap.percentile("lat_seconds", q)
+        # bucket interpolation: within the containing bucket's width
+        # (one neighbour of slack for the rank convention)
+        assert abs(est - exact) <= 2 * _bucket_span(exact), (q, est, exact)
+    # +Inf observations clamp to the last finite edge
+    reg2 = MetricsRegistry()
+    reg2.observe("big_seconds", 100.0)
+    assert reg2.snapshot().percentile("big_seconds", 0.99) == \
+        DEFAULT_TIME_BUCKETS[-1]
+    assert reg.snapshot().percentile("absent", 0.5) is None
+
+
+def test_count_le_is_conservative():
+    reg = MetricsRegistry()
+    for _ in range(10):
+        reg.observe("lat_seconds", 0.03)         # bucket (0.025, 0.05]
+    snap = reg.snapshot()
+    assert snap.count_le("lat_seconds", 0.05) == 10   # edge included
+    assert snap.count_le("lat_seconds", 0.04) == 0    # never overcounts
+
+
+def test_rolling_window_with_fake_clock():
+    clk = {"t": 0.0}
+    reg = MetricsRegistry(clock=lambda: clk["t"])
+    reg.histogram("lat_seconds", window_s=6.0)
+    for _ in range(10):
+        reg.observe("lat_seconds", 0.01)
+    clk["t"] = 3.0
+    for _ in range(5):
+        reg.observe("lat_seconds", 0.01)
+    snap = reg.snapshot()
+    assert snap.hist_count("lat_seconds") == 15
+    assert snap.hist_count("lat_seconds", window=True) == 15
+    clk["t"] = 8.0                   # first burst aged out of the window
+    snap = reg.snapshot()
+    assert snap.hist_count("lat_seconds", window=True) == 5
+    clk["t"] = 60.0                  # everything aged out
+    snap = reg.snapshot()
+    assert snap.hist_count("lat_seconds", window=True) == 0
+    assert snap.percentile("lat_seconds", 0.99, window=True) is None
+    assert snap.hist_count("lat_seconds") == 15       # lifetime keeps all
+
+
+def test_slo_burn_math():
+    reg = MetricsRegistry()
+    reg.histogram("req_seconds", labelnames=("outcome",), window_s=60.0)
+    for _ in range(90):
+        reg.observe("req_seconds", 0.01, outcome="ok")     # good
+    for _ in range(6):
+        reg.observe("req_seconds", 2.0, outcome="ok")      # slow = bad
+    for _ in range(4):
+        reg.observe("req_seconds", 0.001, outcome="error")  # fast but bad
+    snap = reg.snapshot()
+    burn = snap.slo_burn("req_seconds", threshold_s=0.1, target=0.99,
+                         good_filter={"outcome": "ok"})
+    # 10 bad of 100 over a 1% budget -> 10x burn
+    assert burn == pytest.approx(10.0 / 0.01 / 100.0)
+    assert snap.slo_burn("absent", 0.1, 0.99) == 0.0
+
+
+def test_snapshot_json_round_trip_and_prometheus(tmp_path):
+    reg = MetricsRegistry()
+    reg.inc("jobs_total", 5, tier="blocks")
+    reg.set_gauge("depth", 2)
+    for v in (0.001, 0.02, 0.3):
+        reg.observe("lat_seconds", v, outcome="ok")
+    snap = reg.snapshot()
+    snap.meta["slo"] = {"burn": 0.5}
+    path = snap.save(tmp_path / "snap.json")
+    back = MetricsSnapshot.load(path)
+    assert back.total("jobs_total") == 5
+    assert back.value("depth") == 2
+    assert back.meta["slo"]["burn"] == 0.5
+    assert back.percentile("lat_seconds", 0.5) == \
+        snap.percentile("lat_seconds", 0.5)
+    text = back.to_prometheus()
+    assert text == reg.to_prometheus()
+    assert '# TYPE jobs_total counter' in text
+    assert 'jobs_total{tier="blocks"} 5' in text
+    assert '# TYPE lat_seconds histogram' in text
+    # cumulative buckets end at the +Inf total
+    assert 'lat_seconds_bucket{le="+Inf",outcome="ok"} 3' in text
+    assert 'lat_seconds_count{outcome="ok"} 3' in text
+    with pytest.raises(ValueError):
+        MetricsSnapshot.from_json({"kind": "nope"})
+
+
+def test_ambient_helpers_no_op_without_registry():
+    from repro.obs import metrics as m
+    m.inc("never_total")                         # must not raise
+    m.observe("never_seconds", 1.0)
+    m.set_gauge("never", 1.0)
+    assert m.current_registry() is None
+    reg = MetricsRegistry()
+    with reg.installed():
+        assert m.current_registry() is reg
+        m.inc("seen_total", 2)
+    assert m.current_registry() is None
+    assert reg.value("seen_total") == 2
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_is_bounded():
+    rec = FlightRecorder(capacity=16)
+    for i in range(100):
+        rec.record("e", i=i)
+    assert len(rec) == 16
+    assert rec.recorded == 100
+    tail = rec.tail(4)
+    assert [r["args"]["i"] for r in tail] == [96, 97, 98, 99]
+
+
+def test_recorder_recent_for_filters_by_ticket():
+    rec = FlightRecorder(capacity=64)
+    rec.record("dispatch", jobs=4)               # id-less cohort context
+    rec.record("job_retry", id=7)
+    rec.record("job_retry", id=9)
+    got = rec.recent_for(7)
+    names = [(r["name"], r["args"].get("id")) for r in got]
+    assert ("dispatch", None) in names
+    assert ("job_retry", 7) in names
+    assert ("job_retry", 9) not in names
+
+
+def test_recorder_dump_rate_limit_and_loadable_json(tmp_path):
+    rec = FlightRecorder(capacity=32, blackbox_dir=str(tmp_path),
+                         label="t")
+    rec.record("before", k=1)
+    p1 = rec.dump("unit_test", extra="x")
+    assert p1 is not None
+    assert rec.dump("unit_test") is None         # rate-limited
+    assert rec.dump("unit_test", force=True) is not None
+    assert rec.dump("other_reason") is not None  # per-reason limits
+    with open(p1) as f:
+        doc = json.load(f)
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "before" in names
+    od = doc["otherData"]
+    assert od["tool"] == "repro.obs.recorder"
+    assert od["reason"] == "unit_test" and od["extra"] == "x"
+    assert len(rec.dumps) == 3
+
+
+def test_span_and_event_feed_recorder_without_tracer():
+    rec = FlightRecorder(capacity=32)
+    with rec.installed():
+        with obs_trace.span("work", k=1):
+            pass
+        obs_trace.event("ping", n=2)
+    recs = rec.tail()
+    spans = [r for r in recs if r["ph"] == "X"]
+    assert [s["name"] for s in spans] == ["work"]
+    assert spans[0]["dur"] >= 0.0
+    assert any(r["name"] == "ping" and r["ph"] == "i" for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# Stats as registry views
+# ---------------------------------------------------------------------------
+
+def test_fleet_stats_match_registry_and_prometheus():
+    img = _loop_prog()
+    datas = _datas(4)
+    sched = FleetScheduler(CFG, batch_size=4, compile_min=1)
+    hs = [sched.submit(img, d, tdx_dim=32) for d in datas]
+    r1 = sched.drain()
+    for d in datas:
+        sched.submit(img, d, tdx_dim=32)
+    sched.drain()
+    st = sched.stats
+    reg = st.registry
+    assert st.jobs == 8 == int(reg.total("fleet_jobs_total"))
+    assert st.batches == int(reg.total("fleet_batches_total"))
+    assert st.compiled_jobs == int(
+        reg.total("fleet_jobs_total", tier="blocks")
+        + reg.total("fleet_jobs_total", tier="superblock"))
+    assert st.residency_hits == int(
+        reg.total("fleet_residency_lookups_total", result="hit"))
+    assert st.residency_hits >= 1                # second drain replays
+    text = reg.to_prometheus()
+    assert "fleet_jobs_total{" in text
+    assert "fleet_dispatch_seconds_bucket" in text
+    for h, ref in zip(hs, _refs(img, datas)):
+        assert np.array_equal(r1[h].shared_u32(), ref)
+
+
+def test_service_stats_are_views_not_copies():
+    img = _loop_prog()
+    with FleetService(CFG, batch_size=4, max_delay_s=0.001) as svc:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in _datas(4)]
+        for f in futs:
+            f.result(timeout=300)
+        st = svc.stats
+        assert st.submitted == st.completed == 4
+        assert st.registry is svc.metrics
+        # the scheduler writes into the same registry: no drift between
+        # service-lifetime and per-drain counts
+        assert svc._sched.stats.registry is svc.metrics
+        assert svc.metrics.total("serve_completed_total") == 4
+    snap = svc.stats.final_snapshot
+    assert snap is not None
+    assert snap.total("serve_completed_total") == 4
+    assert snap.meta["slo"]["request_p99_s"] is not None
+    assert svc.slo_status()["window_s"] == svc.slo_window_s
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: telemetry on/off, all three tiers
+# ---------------------------------------------------------------------------
+
+_FORCE_BLOCKS = TierPolicy(batch_superblock_min=10**9,
+                           min_backedge_dispatches=10**9,
+                           min_trace_fusion=10**9,
+                           min_fori_execd=10**9)
+
+
+@pytest.mark.parametrize("tier,kw", [
+    ("interp", {"use_compiler": False}),
+    ("blocks", {"tier_policy": _FORCE_BLOCKS}),
+    ("superblock", {}),
+])
+def test_bit_identical_with_telemetry_on_and_off(tier, kw):
+    img = _loop_prog()
+    datas = _datas(4)
+    refs = _refs(img, datas)
+    outs = {}
+    for tm in (True, False):
+        with FleetService(CFG, batch_size=4, max_delay_s=0.001,
+                          telemetry=tm, slo_latency_s=0.1, **kw) as svc:
+            futs = [svc.submit(img, d, tdx_dim=32) for d in datas]
+            outs[tm] = [f.result(timeout=600) for f in futs]
+        assert svc.stats.completed == 4
+    assert all(r.tier == tier for r in outs[True]), \
+        [r.tier for r in outs[True]]
+    for on, off, ref in zip(outs[True], outs[False], refs):
+        u_on = on.shared_u32()
+        assert np.array_equal(u_on, off.shared_u32())
+        assert np.array_equal(u_on, ref)
+        assert on.cycles == off.cycles
+
+
+def test_telemetry_off_strips_histograms_and_recorder():
+    img = _loop_prog()
+    with FleetService(CFG, batch_size=4, max_delay_s=0.001,
+                      telemetry=False) as svc:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in _datas(4)]
+        for f in futs:
+            f.result(timeout=300)
+    assert svc.recorder is None
+    assert svc.stats.completed == 4              # counters stay: they
+    snap = svc.stats.final_snapshot              # ARE the stats store
+    assert snap.hist_count("serve_request_latency_seconds") == 0
+    assert snap.value("serve_queue_depth") == 0
+
+
+# ---------------------------------------------------------------------------
+# Failure context: recent_events and the chaos blackbox
+# ---------------------------------------------------------------------------
+
+def test_job_error_carries_recent_events(tmp_path):
+    img = _loop_prog()
+    plan = FaultPlan(seed=4, dispatch=1.0)
+    svc = FleetService(CFG, batch_size=2, max_delay_s=0.001, faults=plan,
+                       max_retries=0, backoff_s=0.001,
+                       blackbox_dir=str(tmp_path))
+    try:
+        fut = svc.submit(img, _datas(1)[0], tdx_dim=32)
+        with pytest.raises(JobError) as ei:
+            fut.result(timeout=600)
+    finally:
+        svc.close()
+    err = ei.value
+    assert err.kind == "error"
+    assert err.recent_events, "flight-recorder tail must ride the error"
+    names = {r["name"] for r in err.recent_events}
+    assert "dispatch" in names or "fault_dispatch" in names
+    # retry exhaustion dumped a blackbox
+    assert svc.stats.blackbox_path is not None
+
+
+def test_chaos_watchdog_reset_produces_loadable_blackbox(tmp_path):
+    img = _loop_prog()
+    datas = _datas(4)
+    # warm the compiled path: the short watchdog must race only the
+    # injected hang, never a cold multi-second XLA compile
+    warm = FleetScheduler(CFG, batch_size=4, compile_min=1,
+                          fixed_bucket=True)
+    warm.submit(img, datas[0], tdx_dim=32)
+    warm.drain()
+    plan = FaultPlan(seed=5,
+                     device_sync={"p": 1.0, "count": 1, "hang_s": 1.5})
+    svc = FleetService(CFG, batch_size=4, max_delay_s=0.001, faults=plan,
+                       dispatch_timeout_s=0.3, max_retries=2,
+                       blackbox_dir=str(tmp_path), slo_latency_s=0.1)
+    try:
+        futs = [svc.submit(img, d, tdx_dim=32) for d in datas]
+        res = [f.result(timeout=600) for f in futs]
+    finally:
+        svc.close()
+    for r, ref in zip(res, _refs(img, datas)):
+        assert np.array_equal(r.shared_u32(), ref)
+    st = svc.stats
+    assert st.scheduler_resets == 1
+    assert st.timeouts == 4
+    # the reset dumped a blackbox into our dir, and it loads as a
+    # Chrome/Perfetto trace with the hang context inside
+    assert st.blackbox_path is not None
+    with open(st.blackbox_path) as f:
+        doc = json.load(f)
+    assert doc["otherData"]["tool"] == "repro.obs.recorder"
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert doc["otherData"]["reason"] == "dispatch_timeout"
+    assert "dispatch_timeout" in names
+    assert "fault_injected" in names             # the hang's injection
+    # ... and the injection itself triggered its own earlier dump
+    reasons = [d for d in svc.recorder.dumps
+               if "fault_device_sync" in d]
+    assert reasons
+    # the replacement scheduler adopted the same registry (no drift)
+    assert svc._sched.stats.registry is svc.metrics
+    # Prometheus counters agree exactly with the stats views
+    snap = st.final_snapshot
+    assert snap.total("serve_failed_total") == st.failed
+    assert snap.total("serve_scheduler_resets_total") == 1
+    assert snap.total("serve_watchdog_jobs_total") == 4
+    text = snap.to_prometheus()
+    assert 'serve_scheduler_resets_total{reason="dispatch_timeout"} 1' \
+        in text
+    assert snap.meta["slo"]["burn"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# report --metrics rendering
+# ---------------------------------------------------------------------------
+
+def test_report_renders_metrics_snapshot(tmp_path):
+    from repro.obs import report as report_mod
+
+    reg = MetricsRegistry()
+    reg.inc("serve_submitted_total", 5, priority=1)
+    reg.set_gauge("serve_queue_depth", 3)
+    reg.histogram("serve_request_latency_seconds",
+                  labelnames=("outcome",), window_s=60.0)
+    for v in (0.001, 0.02, 0.3):
+        reg.observe("serve_request_latency_seconds", v, outcome="ok")
+    snap = reg.snapshot()
+    snap.meta["slo"] = {"window_s": 60.0, "burn": 0.25,
+                        "request_p99_s": 0.29}
+    text = report_mod.render_metrics(snap)
+    assert "serve_submitted_total{priority=1}" in text
+    assert "serve_queue_depth" in text
+    assert "serve_request_latency_seconds" in text
+    assert "SLO status" in text and "burn" in text
+    # and the CLI path accepts a snapshot file (auto-detected)
+    path = snap.save(tmp_path / "snap.json")
+    assert report_mod.main([str(path)]) == 0
+    assert report_mod.main(["--metrics", str(path)]) == 0
