@@ -1,0 +1,25 @@
+"""Whole-program static analysis over the eGPU ISA control-flow graph.
+
+The ISA has no data-dependent branches — every JMP/JSR/LOOP target and
+every INIT trip count is an immediate — so a program's control behaviour
+is fully decidable at submit time.  This package exploits that:
+
+* :func:`analyze` — CFG dataflow passes (reaching definitions per
+  thread-space personality, stack balance for the predicate/loop/call
+  stacks, interval-based shared-memory bounds, static trip-count and
+  trace-budget prediction, dead/unreachable code), producing structured
+  :class:`Diagnostic` objects with severities and path witnesses.
+* :func:`optimize_image` — a verified pre-compile optimizer (constant
+  folding + dead-code elimination over the CFG, hazard NOPs re-derived
+  by the assembler's scheduler).
+* ``python -m repro.analysis.lint`` — renders diagnostics for one
+  program or the whole in-repo suite.
+
+The fleet admission path (`repro.fleet.scheduler.check_job`) rejects
+ERROR-level programs before any compile.
+"""
+from .diagnostics import (AnalysisReport, Diagnostic,  # noqa: F401
+                          ProgramVerificationError, Severity)
+from .passes import analyze, analyze_cached            # noqa: F401
+from .optimizer import OptResult, optimize_image       # noqa: F401
+from .concrete import ConcreteResult, concrete_run     # noqa: F401

@@ -237,6 +237,8 @@ class Asm:
         addr, labels = 0, {}
         for it in items:
             if isinstance(it, Label):
+                if it.name in labels:
+                    raise ValueError(f"duplicate label {it.name!r}")
                 labels[it.name] = addr
             else:
                 addr += 1
@@ -353,7 +355,13 @@ def schedule(items: Sequence, cfg: EGPUConfig, threads_active: int) -> list:
         # --- subroutine boundaries: drain every pending write ----------
         # (the linear pass cannot see call-graph edges; the paper's 8-deep
         # pipe makes the full drain at most 7 NOPs per JSR/RTS)
-        if o in (Op.JSR, Op.RTS):
+        # Forward JMPs drain too: the jump path reaches the target with
+        # only one cycle elapsed, while the linear pass advances ``now``
+        # through the whole skipped region — pending pre-JMP writes would
+        # look settled at the join when at runtime they are not.
+        if o in (Op.JSR, Op.RTS) or (
+                o == Op.JMP and not (isinstance(ins.imm, str)
+                                     and ins.imm in label_pos)):
             need = 0
             for w in ready.values():
                 need = max(need,

@@ -89,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from . import cfg as cfg_mod
 from . import isa, semantics
 from . import machine as machine_mod
 from .assembler import ProgramImage
@@ -104,20 +105,11 @@ from ..obs import trace as obs_trace
 _I32 = jnp.int32
 _U32 = jnp.uint32
 
-#: sequencer ops that end a basic block (IF/ELSE/ENDIF are *predicate*
-#: ops — they mask threads but never move the PC, so they trace inline)
-_SEQ_TERM = (int(Op.JMP), int(Op.JSR), int(Op.RTS), int(Op.LOOP),
-             int(Op.STOP))
-
-#: trace-size bound: longer straight-line runs are split with an
-#: artificial fall-through (keeps per-block XLA compiles bounded)
-_MAX_BLOCK = 192
-
-#: superblock trace budget — total instructions traced per compile
-#: (straight-line runs plus each repeat body once); the generalization
-#: of the per-block ``_MAX_BLOCK`` bound to whole-path traces.  Programs
-#: over budget fall back to the basic-block driver.
-_MAX_TRACE = 4096
+#: block/trace structure is shared with the static analyzer — see
+#: ``repro.core.cfg`` for the definitions
+_SEQ_TERM = cfg_mod.SEQ_TERM
+_MAX_BLOCK = cfg_mod.MAX_BLOCK
+_MAX_TRACE = cfg_mod.MAX_TRACE
 
 #: a repeat whose *executed* size is at most this unrolls fully into the
 #: surrounding straight line (maximum fusion); larger repeats run as a
@@ -177,30 +169,8 @@ def _tsc_static(cfg: EGPUConfig, tsc: int, threads: int):
 # CFG decomposition
 # ---------------------------------------------------------------------------
 
-def _decompose(packed: np.ndarray, n: int) -> list[tuple[int, int]]:
-    """Split ``[0, n)`` into basic blocks ``(start, end)`` (end exclusive,
-    terminator included).  Leaders: instruction 0, every in-range
-    JMP/JSR/LOOP target, and every instruction after a sequencer op
-    (fall-throughs and JSR return addresses)."""
-    ops = packed[:n, _PF_OP]
-    imms = packed[:n, _PF_IMM]
-    leaders = {0}
-    for i in range(n):
-        o = int(ops[i])
-        if o in (int(Op.JMP), int(Op.JSR), int(Op.LOOP)):
-            t = int(imms[i])
-            if 0 <= t < n:
-                leaders.add(t)
-        if o in _SEQ_TERM and i + 1 < n:
-            leaders.add(i + 1)
-    starts = sorted(leaders)
-    blocks: list[tuple[int, int]] = []
-    for s, e in zip(starts, starts[1:] + [n]):
-        while e - s > _MAX_BLOCK:
-            blocks.append((s, s + _MAX_BLOCK))
-            s += _MAX_BLOCK
-        blocks.append((s, e))
-    return blocks
+#: shared with the static analyzer — extracted to ``repro.core.cfg``
+_decompose = cfg_mod.decompose
 
 
 # ---------------------------------------------------------------------------
@@ -410,11 +380,20 @@ class TierPolicy:
         wide = self._table["batch_superblock_min"]
         return wide if batch >= wide else 1
 
-    def features(self, sim: _SimResult) -> dict:
-        """The decision's inputs, extracted from one path simulation."""
+    def features(self, sim: _SimResult,
+                 cfg_facts: dict | None = None) -> dict:
+        """The decision's inputs, extracted from one path simulation.
+
+        ``cfg_facts`` merges static control-flow-graph facts
+        (:func:`repro.core.cfg.summary`) into the feature dict — the
+        decision rules ignore keys they don't know, so the extra
+        features ride along for logging and offline cost-model
+        fitting."""
         cap = self._table["max_trace_cost"]
         cap = _MAX_TRACE if cap is None else cap
         base = {"dispatches": sim.dispatches, "execd": sim.steps}
+        if cfg_facts:
+            base.update(cfg_facts)
         if sim.schedule is None:
             return {**base, "eligible": False, "trace_cost": None,
                     "fori_reps": 0, "unrolled_reps": 0,
@@ -795,7 +774,8 @@ class CompiledProgram:
         self.schedule = self.sim.schedule
         self.policy = DEFAULT_TIER_POLICY if policy is None else policy
         self.batch_hint = batch_hint
-        self.tier_features = self.policy.features(self.sim)
+        self.tier_features = self.policy.features(
+            self.sim, cfg_facts=cfg_mod.summary(self.packed, self.n))
         eligible = self.tier_features["eligible"]
         if mode == "superblock" and not eligible:
             cap = self.policy.table["max_trace_cost"]
@@ -1338,7 +1318,8 @@ def normalize_threads(image: ProgramImage, threads: int | None) -> int:
 def compile_program(image: ProgramImage, threads: int | None = None, *,
                     validate: bool = True, mode: str = "auto",
                     policy: TierPolicy | None = None,
-                    batch_hint: int = 1) -> CompiledProgram:
+                    batch_hint: int = 1,
+                    optimize: bool = False) -> CompiledProgram:
     """Compile ``image`` for a static runtime thread count (default: the
     count it was assembled for).  Compiles are cached on (config,
     program bytes, threads, validate, mode, policy, batch class) with
@@ -1358,8 +1339,18 @@ def compile_program(image: ProgramImage, threads: int | None = None, *,
 
     Raises :class:`BlockCompileError` for programs whose static path does
     not halt within ``cfg.max_steps``.
+
+    ``optimize=True`` first runs the verified pre-compile optimizer
+    (:func:`repro.analysis.optimizer.optimize_image`, itself cached):
+    constant folding + dead-code elimination with hazard NOPs
+    re-derived by the scheduler, bit-identical architectural end state
+    guaranteed.  The optimized image then keys the compile cache as
+    usual (distinct program bytes, distinct entry).
     """
     threads = normalize_threads(image, threads)
+    if optimize:
+        from ..analysis.optimizer import optimize_image_cached
+        image = optimize_image_cached(image, threads).image
     pol = DEFAULT_TIER_POLICY if policy is None else policy
     hint = pol.batch_class(batch_hint) if mode == "auto" else 1
     key = (image.cfg, program_key(image), threads, validate, mode, pol,

@@ -33,6 +33,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import ProgramVerificationError, analyze_cached
 from ..core import isa
 from ..core import machine as machine_mod
 from ..core.assembler import Asm, ProgramImage
@@ -51,18 +52,63 @@ from .engine import ResidencyCache, fleet_run
 
 
 def check_job(cfg: EGPUConfig, image: ProgramImage, shared_init,
-              threads: int | None) -> tuple[np.ndarray | None, int]:
+              threads: int | None, *, tdx_dim: int = 16,
+              lint: bool = True) -> tuple[np.ndarray | None, int]:
     """Validate one job's inputs against ``cfg`` **at submission time**,
     so a malformed job fails fast with a clear ``ValueError`` instead of
     a deep XLA/NumPy shape or cast error mid-drain (where it would take
     its whole batch down with it).  Returns the coerced
     ``(shared_init, threads)`` pair.  Shared by :meth:`FleetScheduler.submit`
-    and :meth:`repro.fleet.service.FleetService.submit`."""
+    and :meth:`repro.fleet.service.FleetService.submit`.
+
+    With ``lint=True`` (the default) the whole-program static verifier
+    (:func:`repro.analysis.analyze`) also runs — cached per (config,
+    program, threads) — and ERROR-level findings (out-of-image branch
+    targets, undefined TSC width codings, stack underflow/overflow,
+    proven out-of-bounds accesses, programs that cannot halt) raise
+    :class:`repro.analysis.ProgramVerificationError`, a ``ValueError``
+    subclass carrying the structured diagnostics, *before* any compile
+    or dispatch touches the job."""
+    # Per-image memo: the steady-state submit path costs one attribute
+    # probe, not a bytes-keyed cache hash (ProgramImage is a plain
+    # dataclass, so the instance dict is writable).  A hit also proves
+    # the (cfg, threads) pair already passed the config/thread checks
+    # below — same cfg object, same arguments — so the warm path skips
+    # re-validating them.
+    if lint:
+        try:
+            memo = image._lint_memo
+        except AttributeError:
+            memo = None
+        if memo is not None and memo[0] is cfg and memo[1] == threads \
+                and memo[2] == tdx_dim:
+            if not memo[4]:
+                raise ProgramVerificationError(memo[5])
+            threads = memo[3]
+            if shared_init is None:
+                return None, threads
+            arr = np.asarray(shared_init)
+            if arr.dtype.kind not in "fiub":
+                raise ValueError(
+                    f"shared_init dtype {arr.dtype} is not packable into "
+                    f"32-bit shared-memory words; pass float/int/uint data")
+            if arr.size > cfg.shared_words:
+                raise ValueError(
+                    f"shared_init ({arr.size} words) exceeds "
+                    f"{cfg.shared_words}")
+            return arr, threads
     if image.cfg != cfg:
         raise ValueError("job config does not match the fleet config")
+    raw_threads = threads
     threads = normalize_threads(image, threads)
     if threads > cfg.max_threads or threads % cfg.num_sps:
         raise ValueError(f"bad runtime thread count {threads}")
+    if lint:
+        report = analyze_cached(image, threads, tdx_dim=tdx_dim)
+        image._lint_memo = (cfg, raw_threads, tdx_dim, threads,
+                           report.ok, report)
+        if not report.ok:
+            raise ProgramVerificationError(report)
     if shared_init is None:
         return None, threads
     arr = np.asarray(shared_init)
@@ -475,9 +521,19 @@ class FleetScheduler:
         Inputs are validated here (:func:`check_job`), so a malformed
         ``shared_init`` (wrong dtype, over-length) or thread count is a
         clear ``ValueError`` at submission, never a mid-drain batch
-        failure."""
-        shared_init, threads = check_job(self.cfg, image, shared_init,
-                                         threads)
+        failure; statically broken programs raise
+        :class:`~repro.analysis.ProgramVerificationError` (also a
+        ``ValueError``) with the verifier's diagnostics attached."""
+        try:
+            shared_init, threads = check_job(self.cfg, image, shared_init,
+                                             threads, tdx_dim=tdx_dim)
+        except Exception as e:
+            diags = getattr(e, "diagnostics", None)
+            if diags is not None:
+                self._event("admission_lint_reject", prog_len=image.n,
+                            errors=len(diags),
+                            codes=",".join(sorted({d.code for d in diags})))
+            raise
         handle = self._next_handle
         self._next_handle += 1
         self._queue.append(FleetJob(

@@ -74,7 +74,10 @@ class JobError(Exception):
     ``kind`` is one of ``"deadline"`` (missed its deadline before
     dispatch), ``"timeout"`` (dispatch watchdog fired and retries ran
     out), ``"error"`` (failed on every tier and every retry),
-    ``"shutdown"`` (service closed without draining).  ``attempts`` is
+    ``"shutdown"`` (service closed without draining), ``"rejected"``
+    (the static verifier found ERROR-level defects at submit; ``cause``
+    is the :class:`~repro.analysis.ProgramVerificationError` and
+    carries the full diagnostic report).  ``attempts`` is
     how many dispatches the job consumed; ``cause`` the last underlying
     exception (``None`` for deadline/shutdown).  ``recent_events`` is
     the flight recorder's tail for this ticket's cohort (the ticket's
@@ -135,6 +138,8 @@ def register_serve_metrics(reg: obs_metrics.MetricsRegistry,
                 "futures resolved with a JobError", ("kind",))
     reg.counter("serve_rejected_total",
                 "AdmissionError raised at submit")
+    reg.counter("serve_lint_rejected_total",
+                "programs the static verifier rejected at submit")
     reg.counter("serve_retries_total",
                 "re-queues after a failed attempt", ("kind",))
     reg.counter("serve_dispatches_total",
@@ -204,6 +209,11 @@ class ServiceStats:
     def rejected(self) -> int:
         """AdmissionError raised at submit."""
         return self._t("serve_rejected_total")
+
+    @property
+    def lint_rejected(self) -> int:
+        """Programs the static verifier rejected at submit."""
+        return self._t("serve_lint_rejected_total")
 
     @property
     def deadline_misses(self) -> int:
@@ -415,9 +425,22 @@ class FleetService:
         relative to now (``default_deadline_s`` when ``None``); a job
         that cannot dispatch before its deadline is masked out of its
         batch and failed fast.  Over budget, ``submit`` blocks or
-        raises :class:`AdmissionError` per the ``admission`` mode."""
-        shared_init, threads = check_job(self.cfg, image, shared_init,
-                                         threads)
+        raises :class:`AdmissionError` per the ``admission`` mode.
+        Programs the static verifier proves broken raise
+        :class:`JobError` (``kind="rejected"``) here, before any
+        compile; the verifier's report rides on ``.cause.report``."""
+        try:
+            shared_init, threads = check_job(self.cfg, image, shared_init,
+                                             threads, tdx_dim=tdx_dim)
+        except Exception as e:
+            diags = getattr(e, "diagnostics", None)
+            if diags is None:
+                raise
+            self.metrics.inc("serve_lint_rejected_total")
+            self._event("admission_lint_reject", prog_len=image.n,
+                        errors=len(diags),
+                        codes=",".join(sorted({d.code for d in diags})))
+            raise JobError("rejected", detail=str(e), cause=e) from e
         cost = float(weight) if weight is not None \
             else float(image.static_cycle_estimate())
         if deadline_s is None:

@@ -162,6 +162,25 @@ def serve_events(events: list[dict]) -> dict[str, int]:
     return out
 
 
+def admission_events(events: list[dict]) -> dict:
+    """Static-verifier admission activity: how many submits the
+    whole-program analyzer rejected before compile, with the diagnostic
+    codes that fired (``admission_lint_reject`` instants from either
+    the scheduler or the serving layer)."""
+    rejects = 0
+    errors = 0
+    codes: dict[str, int] = {}
+    for e in events:
+        if e.get("ph") == "i" and e.get("name") == "admission_lint_reject":
+            a = e.get("args", {})
+            rejects += 1
+            errors += int(a.get("errors", 0))
+            for c in str(a.get("codes", "")).split(","):
+                if c:
+                    codes[c] = codes.get(c, 0) + 1
+    return {"rejects": rejects, "errors": errors, "codes": codes}
+
+
 def _pct(sorted_vals: list[float], q: float) -> float:
     if not sorted_vals:
         return 0.0
@@ -246,6 +265,15 @@ def render(events: list[dict]) -> str:
         lines.append("== serving / fault events ==")
         for k in sorted(srv):
             lines.append(f"  {k:<32} {srv[k]:>8,}")
+
+    adm = admission_events(events)
+    if adm["rejects"]:
+        lines.append("")
+        lines.append("== static-verifier admission ==")
+        lines.append(f"  {'programs rejected':<32} {adm['rejects']:>8,}")
+        lines.append(f"  {'ERROR diagnostics':<32} {adm['errors']:>8,}")
+        for c in sorted(adm["codes"]):
+            lines.append(f"  {'code: ' + c:<32} {adm['codes'][c]:>8,}")
 
     return "\n".join(lines)
 

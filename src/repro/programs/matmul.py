@@ -43,7 +43,7 @@ def build_matmul(cfg: EGPUConfig, n: int, *, use_dot: bool = False) -> Bench:
             a.add(R_IG, R_IL, R_PB)
             a.shl(R_A, R_IG, R_SH)
             a.add(R_C, R_A, R_J)
-            a.shl(R_B, R_J, 0)          # b addr = j (shift by reg0 == 0)
+            a.or_(R_B, R_J, R_J)        # b addr = j (register copy)
             a.lodi(R_ACC, 0)
             with a.loop(n):
                 a.lod(R_AV, R_A, 0)

@@ -22,7 +22,7 @@ from ..core import isa
 from ..core.assembler import Asm
 from ..core.config import EGPUConfig
 from ..core import machine as machine_mod
-from .common import Bench, log2i
+from .common import Bench
 
 
 def _strides(n: int):

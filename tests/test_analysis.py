@@ -1,0 +1,278 @@
+"""Static-analyzer tests: diagnostics, facts, and admission wiring.
+
+Covers the dataflow passes over the real program suite (which must lint
+ERROR/WARN-clean), targeted bad-construct programs that each trip one
+specific ERROR, the block-local IF/ELSE coverage machinery, and the
+submit-time admission path (``check_job`` / ``FleetService.submit``
+rejecting ERROR programs with a structured error before compile).
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (AnalysisReport, ProgramVerificationError,
+                            analyze, analyze_cached)
+from repro.analysis.concrete import concrete_run
+from repro.analysis.lint import suite
+from repro.core import Asm, EGPUConfig, Op
+from repro.core.executor import run_program
+from repro.fleet.scheduler import check_job
+from repro.programs.generator import generate_program
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+SUITE = suite(CFG)
+
+
+# --------------------------------------------------------------------------
+# suite-level: the shipped programs are clean and the facts are exact
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bench", SUITE, ids=[b.name for b in SUITE])
+def test_suite_lints_clean(bench):
+    rep = analyze(bench.image, bench.image.threads_active,
+                  tdx_dim=bench.tdx_dim)
+    assert rep.errors() == [], rep.render()
+    assert rep.warnings() == [], rep.render()
+
+
+@pytest.mark.parametrize("bench", SUITE, ids=[b.name for b in SUITE])
+def test_static_steps_match_interpreter(bench):
+    """The trip-count pass predicts the executed instruction count
+    exactly for every suite program (they are all JMP/JSR-free)."""
+    rep = analyze(bench.image, bench.image.threads_active,
+                  tdx_dim=bench.tdx_dim)
+    ss = rep.facts["static_steps"]
+    assert ss is not None
+    st = run_program(bench.image, threads=bench.image.threads_active,
+                     tdx_dim=bench.tdx_dim, shared_init=bench.shared_init)
+    assert ss == int(st.steps)
+
+
+def test_facts_shape():
+    bench = SUITE[0]
+    rep = analyze(bench.image, bench.image.threads_active,
+                  tdx_dim=bench.tdx_dim)
+    f = rep.facts
+    for key in ("threads", "tdx_dim", "n_blocks", "reached_blocks",
+                "static_steps", "loop_trips", "access_verdicts",
+                "max_pred_depth", "max_loop_depth", "max_call_depth",
+                "fold_candidates", "pred_at", "analysis_clipped"):
+        assert key in f, key
+    assert f["threads"] == bench.image.threads_active
+    assert f["reached_blocks"] >= 1
+    assert not f["analysis_clipped"]
+    # every reachable pc got a predicate-depth annotation
+    assert f["pred_at"].get(0) == 0
+
+
+def test_analyze_cached_hits():
+    bench = SUITE[0]
+    r1 = analyze_cached(bench.image, bench.image.threads_active,
+                        tdx_dim=bench.tdx_dim)
+    r2 = analyze_cached(bench.image, bench.image.threads_active,
+                        tdx_dim=bench.tdx_dim)
+    assert r1 is r2
+
+
+# --------------------------------------------------------------------------
+# targeted bad constructs -> one specific ERROR each
+# --------------------------------------------------------------------------
+
+def _codes(rep: AnalysisReport) -> set:
+    return {d.code for d in rep.errors()}
+
+
+def test_stray_endif_is_error():
+    a = Asm(CFG)
+    a.lodi(1, 7)
+    a.endif()
+    img = a.assemble(threads_active=32)
+    assert "pred-underflow" in _codes(analyze(img, 32))
+
+
+def test_stray_else_is_error():
+    a = Asm(CFG)
+    a.else_()
+    img = a.assemble(threads_active=32)
+    assert "pred-underflow" in _codes(analyze(img, 32))
+
+
+def test_pred_overflow_is_error():
+    a = Asm(CFG)
+    a.lodi(1, 1)
+    for _ in range(CFG.predicate_levels + 1):
+        a.if_("nz", 1)
+    for _ in range(CFG.predicate_levels + 1):
+        a.endif()
+    img = a.assemble(threads_active=32)
+    assert "pred-overflow" in _codes(analyze(img, 32))
+
+
+def test_loop_overflow_is_error():
+    a = Asm(CFG)
+    for _ in range(CFG.max_loop_depth + 1):
+        a.init(0)
+    img = a.assemble(threads_active=32)
+    assert "loop-overflow" in _codes(analyze(img, 32))
+
+
+def test_loop_underflow_is_error():
+    a = Asm(CFG)
+    top = a.label()
+    a.lodi(1, 1)
+    a.loop_(top)
+    img = a.assemble(threads_active=32)
+    assert "loop-underflow" in _codes(analyze(img, 32))
+
+
+def test_rts_underflow_is_error():
+    a = Asm(CFG)
+    a.rts()
+    img = a.assemble(threads_active=32)
+    assert "call-underflow" in _codes(analyze(img, 32))
+
+
+def test_bad_branch_target_is_error():
+    a = Asm(CFG)
+    a.emit(Op.JMP, imm=4096)
+    img = a.assemble(threads_active=32)
+    assert "bad-branch-target" in _codes(analyze(img, 32))
+
+
+def test_const_oob_store_is_error():
+    a = Asm(CFG)
+    a.lodi(1, CFG.shared_words + 5)
+    a.lodi(2, 1)
+    a.sto(2, 1)
+    img = a.assemble(threads_active=32)
+    rep = analyze(img, 32)
+    assert "oob-access" in _codes(rep)
+    assert rep.facts["access_verdicts"]
+
+
+def test_undefined_tsc_width_is_error():
+    from repro.core.isa import decode_word, encode_word
+    a = Asm(CFG)
+    a.lodi(1, 7)
+    img = a.assemble(threads_active=32)
+    # emit() refuses width '11', so forge the encoded word directly
+    ins = decode_word(int(img.words[0]), CFG.regs_per_thread)
+    img.words[0] = np.uint64(
+        encode_word(ins._replace(tsc=0b1100), CFG.regs_per_thread))
+    img.tsc[0] = 0b1100
+    assert "undefined-tsc-width" in _codes(analyze(img, 32))
+
+
+def test_undefined_read_is_warn_not_error():
+    a = Asm(CFG)
+    a.add(1, 2, 3)           # r2/r3 never written
+    img = a.assemble(threads_active=32)
+    rep = analyze(img, 32)
+    assert "undefined-read" in {d.code for d in rep.warnings()}
+    assert rep.errors() == []
+
+
+def test_fixpoint_path_fault_not_erased_at_join():
+    """Regression: a stack fault seen during the fixpoint poisons the
+    abstract stack to None; the join with the clean entry state used to
+    erase the evidence before the reporting replay ran.  (Found by the
+    random-program fuzzer, generator seed 1002.)"""
+    img = generate_program(CFG, 1002, hostility=1.0)
+    res = concrete_run(img, img.threads_active)
+    assert "loop-overflow" in res.stack_faults
+    assert "loop-overflow" in _codes(analyze(img, img.threads_active))
+
+
+# --------------------------------------------------------------------------
+# IF/ELSE both-arms coverage machinery
+# --------------------------------------------------------------------------
+
+def test_both_arms_write_covers_read():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.if_("nz", 1)
+    a.lodi(2, 10)
+    a.else_()
+    a.lodi(2, 20)
+    a.endif()
+    a.add(3, 2, 2)           # r2 defined on every thread: no warning
+    img = a.assemble(threads_active=32)
+    rep = analyze(img, 32)
+    assert rep.warnings() == [], rep.render()
+
+
+def test_one_arm_write_warns():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.if_("nz", 1)
+    a.lodi(2, 10)
+    a.endif()
+    a.add(3, 2, 2)           # r2 defined only where the IF was taken
+    img = a.assemble(threads_active=32)
+    rep = analyze(img, 32)
+    assert "partial-def-read" in {d.code for d in rep.warnings()}
+
+
+def test_read_inside_writing_arm_is_clean():
+    a = Asm(CFG)
+    a.tdx(1)
+    a.if_("nz", 1)
+    a.lodi(2, 10)
+    a.add(3, 2, 2)           # read in the same arm as the write
+    a.endif()
+    img = a.assemble(threads_active=32)
+    rep = analyze(img, 32)
+    assert rep.warnings() == [], rep.render()
+
+
+# --------------------------------------------------------------------------
+# submit-time admission
+# --------------------------------------------------------------------------
+
+def _bad_image():
+    a = Asm(CFG)
+    a.lodi(1, CFG.shared_words + 5)
+    a.lodi(2, 1)
+    a.sto(2, 1)
+    return a.assemble(threads_active=32)
+
+
+def test_check_job_rejects_error_program():
+    img = _bad_image()
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_job(CFG, img, None, 32)
+    assert any(d.code == "oob-access" for d in ei.value.diagnostics)
+    assert isinstance(ei.value, ValueError)
+
+
+def test_check_job_rejects_bad_branch_target():
+    a = Asm(CFG)
+    a.emit(Op.JMP, imm=4096)
+    img = a.assemble(threads_active=32)
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_job(CFG, img, None, 32)
+    assert any(d.code == "bad-branch-target" for d in ei.value.diagnostics)
+
+
+def test_check_job_lint_opt_out():
+    check_job(CFG, _bad_image(), None, 32, lint=False)   # no raise
+
+
+def test_check_job_accepts_suite():
+    for bench in SUITE:
+        check_job(CFG, bench.image, bench.shared_init,
+                  bench.image.threads_active, tdx_dim=bench.tdx_dim)
+
+
+def test_service_submit_rejects_with_job_error():
+    from repro.fleet.service import FleetService, JobError
+    svc = FleetService(CFG)
+    try:
+        with pytest.raises(JobError) as ei:
+            svc.submit(_bad_image(), threads=32)
+        assert ei.value.kind == "rejected"
+        assert svc.stats.lint_rejected == 1
+    finally:
+        svc.close()

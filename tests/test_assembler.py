@@ -1,0 +1,118 @@
+"""Assembler error paths and encode/decode fuzz.
+
+The assembler is the admission boundary's first line: anything it lets
+through must be encodable, decodable, and within the ISA's field
+ranges.  These tests pin the rejection behaviour (undefined TSC width,
+register/immediate overflow, unresolved labels, predicate ops on
+predicate-free configs) and fuzz the word codec round-trip
+deterministically (no hypothesis needed).
+"""
+import random
+
+import pytest
+
+from repro.core import Asm, EGPUConfig, Op, Typ, isa
+from repro.core.isa import Instr, decode_word, encode_word
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+
+# --------------------------------------------------------------------------
+# rejection paths
+# --------------------------------------------------------------------------
+
+def test_emit_rejects_undefined_tsc_width():
+    a = Asm(CFG)
+    with pytest.raises(ValueError):
+        a.emit(Op.ADD, rd=1, ra=2, rb=3, tsc=0b1100)
+
+
+def test_encode_rejects_register_overflow():
+    for field in ("rd", "ra", "rb"):
+        ins = Instr(op=int(Op.ADD), **{field: CFG.regs_per_thread})
+        with pytest.raises(ValueError):
+            encode_word(ins, CFG.regs_per_thread)
+
+
+def test_lodi_rejects_imm_overflow():
+    a = Asm(CFG)
+    with pytest.raises(ValueError):
+        a.lodi(1, 65536)
+    with pytest.raises(ValueError):
+        a.lodi(1, -32769)
+
+
+def test_lodi_accepts_boundary_imms():
+    a = Asm(CFG)
+    a.lodi(1, -32768)
+    a.lodi(1, 32767)
+    a.lodi(1, 65535)        # unsigned view of the 16-bit field
+    img = a.assemble(threads_active=32)
+    assert img.n >= 3
+
+
+def test_if_rejected_without_predicate_hw():
+    a = Asm(CFG.replace(predicate_levels=0))
+    with pytest.raises(ValueError):
+        a.if_("nz", 1)
+
+
+def test_unresolved_label_rejected_at_assemble():
+    a = Asm(CFG)
+    a.jmp("nowhere")
+    with pytest.raises(KeyError):
+        a.assemble(threads_active=32)
+
+
+def test_duplicate_label_rejected():
+    a = Asm(CFG)
+    a.label("x")
+    a.lodi(1, 1)
+    a.label("x")
+    a.jmp("x")
+    with pytest.raises(ValueError):
+        a.assemble(threads_active=32)
+
+
+# --------------------------------------------------------------------------
+# codec fuzz (deterministic)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regs", [16, 32, 64])
+def test_word_roundtrip_fuzz(regs):
+    rng = random.Random(0xE69F0 + regs)
+    for _ in range(2000):
+        ins = Instr(
+            op=rng.randrange(isa.NUM_OPCODES),
+            typ=rng.randrange(3),
+            rd=rng.randrange(regs),
+            ra=rng.randrange(regs),
+            rb=rng.randrange(regs),
+            imm=rng.randrange(-32768, 32768),
+            tsc=rng.randrange(16),
+        )
+        word = encode_word(ins, regs)
+        assert word < (1 << (isa.iw_bits(regs) + 1))
+        assert decode_word(word, regs) == ins
+
+
+def test_assembled_image_decodes_to_emitted_fields():
+    """The packed words and the decoded field arrays of a ProgramImage
+    agree instruction-by-instruction."""
+    a = Asm(CFG)
+    a.lodi(1, -5)
+    a.tdx(2)
+    a.add(3, 1, 2, typ=Typ.I32)
+    a.sto(3, 2, 7)
+    img = a.assemble(threads_active=32)
+    for pc in range(img.n):
+        ins = decode_word(int(img.words[pc]), CFG.regs_per_thread)
+        assert ins.op == int(img.op[pc])
+        assert ins.typ == int(img.typ[pc])
+        assert ins.rd == int(img.rd[pc])
+        assert ins.ra == int(img.ra[pc])
+        assert ins.rb == int(img.rb[pc])
+        assert ins.imm == int(img.imm[pc])
+        assert ins.tsc == int(img.tsc[pc])

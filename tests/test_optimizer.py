@@ -1,0 +1,134 @@
+"""Verified pre-compile optimizer tests.
+
+The contract: :func:`repro.analysis.optimizer.optimize_image` may fold
+input-independent computations into LODI and drop dead register writes,
+but the optimized image's architectural end state (registers, shared
+memory, halt flag) must be **bit-identical** to the original for any
+shared-memory input — enforced here across all three execution tiers
+(interpreter, basic-block compiler, superblock) over the whole program
+suite, plus generated programs.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.concrete import concrete_run
+from repro.analysis.lint import suite
+from repro.analysis.optimizer import (OptResult, optimize_image,
+                                      optimize_image_cached)
+from repro.core import EGPUConfig, compile_program
+from repro.core.blockc import run_compiled
+from repro.core.executor import run_program
+from repro.programs.generator import generate_program
+
+CFG = EGPUConfig(max_threads=32, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+SUITE = suite(CFG)
+
+TIERS = {
+    "interp": lambda img, b: run_program(
+        img, threads=img.threads_active, tdx_dim=b.tdx_dim,
+        shared_init=b.shared_init),
+    "blocks": lambda img, b: run_compiled(
+        img, threads=img.threads_active, tdx_dim=b.tdx_dim,
+        shared_init=b.shared_init, mode="blocks"),
+    "superblock": lambda img, b: run_compiled(
+        img, threads=img.threads_active, tdx_dim=b.tdx_dim,
+        shared_init=b.shared_init, mode="superblock"),
+}
+
+
+def _arch_state(st):
+    return (np.asarray(st.regs), np.asarray(st.shared), bool(st.halted))
+
+
+@pytest.mark.parametrize("bench", SUITE, ids=[b.name for b in SUITE])
+def test_suite_bit_identical_across_tiers(bench):
+    """Acceptance criterion: optimizer output is bit-identical on the
+    full suite under every tier."""
+    res = optimize_image(bench.image, bench.image.threads_active,
+                         tdx_dim=bench.tdx_dim)
+    assert not res.reason or not res.changed, res.reason
+    for name, tier in TIERS.items():
+        ref = _arch_state(tier(bench.image, bench))
+        got = _arch_state(tier(res.image, bench))
+        assert np.array_equal(ref[0], got[0]), f"{name}: regs differ"
+        assert np.array_equal(ref[1], got[1]), f"{name}: shared differs"
+        assert ref[2] == got[2], f"{name}: halt flag differs"
+
+
+@pytest.mark.parametrize("bench", SUITE, ids=[b.name for b in SUITE])
+def test_optimized_schedule_is_hazard_free(bench):
+    res = optimize_image(bench.image, bench.image.threads_active,
+                         tdx_dim=bench.tdx_dim)
+    st = run_program(res.image, threads=res.image.threads_active,
+                     tdx_dim=bench.tdx_dim, shared_init=bench.shared_init)
+    assert int(st.hazard_violations) == 0
+
+
+def test_fft_actually_optimizes():
+    bench = next(b for b in SUITE if b.name.startswith("fft_16"))
+    res = optimize_image(bench.image, bench.image.threads_active,
+                         tdx_dim=bench.tdx_dim)
+    assert res.changed
+    assert res.folds >= 1
+    assert res.dce_removed >= 1
+    assert res.image.n < bench.image.n
+
+
+def test_reduction_round_trips_unchanged():
+    """NOP strip + re-schedule reproduces the input exactly when there
+    is nothing to optimize — the reassembler is the identity."""
+    bench = next(b for b in SUITE if b.name == "reduction_32_dp")
+    res = optimize_image(bench.image, bench.image.threads_active,
+                         tdx_dim=bench.tdx_dim)
+    assert not res.changed
+    assert res.image.words.tobytes() == bench.image.words.tobytes()
+
+
+def test_input_errors_bail_without_change():
+    from repro.core import Asm
+    a = Asm(CFG)
+    a.lodi(1, CFG.shared_words + 5)
+    a.sto(1, 1)
+    img = a.assemble(threads_active=32)
+    res = optimize_image(img, 32)
+    assert not res.changed
+    assert res.reason == "input-has-errors"
+    assert res.image is img
+
+
+def test_optimize_cached_hits():
+    bench = SUITE[0]
+    r1 = optimize_image_cached(bench.image, bench.image.threads_active,
+                               tdx_dim=bench.tdx_dim)
+    r2 = optimize_image_cached(bench.image, bench.image.threads_active,
+                               tdx_dim=bench.tdx_dim)
+    assert r1 is r2
+
+
+def test_compile_program_optimize_flag():
+    bench = next(b for b in SUITE if b.name.startswith("fft_16"))
+    cp = compile_program(bench.image, bench.image.threads_active,
+                         optimize=True)
+    st = cp.run(shared_init=bench.shared_init, tdx_dim=bench.tdx_dim)
+    ref = run_program(bench.image, threads=bench.image.threads_active,
+                      tdx_dim=bench.tdx_dim, shared_init=bench.shared_init)
+    assert np.array_equal(np.asarray(st.regs), np.asarray(ref.regs))
+    assert np.array_equal(np.asarray(st.shared), np.asarray(ref.shared))
+
+
+@pytest.mark.parametrize("seed", [0, 2, 3, 5, 11, 19, 23, 31])
+def test_generated_programs_optimize_equivalently(seed):
+    """Generated programs through the optimizer: the built-in
+    differential verification must hold, and the concrete reference
+    must agree between original and optimized images."""
+    img = generate_program(CFG, seed)
+    res = optimize_image(img, img.threads_active)   # raises on divergence
+    assert isinstance(res, OptResult)
+    a = concrete_run(img, img.threads_active)
+    b = concrete_run(res.image, res.image.threads_active)
+    assert a.halted == b.halted
+    assert np.array_equal(a.regs, b.regs)
+    assert np.array_equal(a.shared, b.shared)
