@@ -201,6 +201,94 @@ def bench_residency(cfg, batch: int = 32, drains: int = 6) -> dict:
     }
 
 
+def bench_multidevice(cfg, batch: int = 32, rounds: int = 4,
+                      repeats: int = 2, mix: str = "suite",
+                      verify: bool = True) -> dict:
+    """N-device sharded drain vs the 1-device scheduler on one job list.
+
+    The job list scales with the device count so every device has work
+    (``rounds`` batches per device).  Same-program runs ride the
+    ``shard_map`` megabatch path; the heterogeneous remainder goes
+    through cost-balanced per-device lanes.  Results are asserted
+    bit-identical between the two schedulers before timing; the
+    ``scaling`` ratio (N-device jobs/s over 1-device jobs/s) is what
+    the trend gate tracks on multi-device runners.
+    """
+    import jax
+    import numpy as np
+
+    from repro.fleet import FleetScheduler, ShardedFleetScheduler
+
+    ndev = len(jax.devices())
+    jobs = build_jobs(cfg, batch * rounds * max(ndev, 1), mix)
+
+    def run_once(make):
+        sched = make()
+        hs = [sched.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
+                           tag=b.name,
+                           weight=b.image.static_cycle_estimate())
+              for b in jobs]
+        t0 = time.perf_counter()
+        rs = sched.drain()
+        return time.perf_counter() - t0, [rs[h] for h in hs]
+
+    one = lambda: FleetScheduler(cfg, batch_size=batch)
+    many = lambda: ShardedFleetScheduler(cfg, batch_size=batch,
+                                         devices="all")
+    # warm every compile cache on both paths before timing
+    _, truth = run_once(one)
+    _, sharded = run_once(many)
+    if verify:
+        for i, (a, b) in enumerate(zip(truth, sharded)):
+            assert np.array_equal(a.shared_u32(), b.shared_u32()), i
+            assert a.cycles == b.cycles, i
+    one_s = min(run_once(one)[0] for _ in range(repeats))
+    many_s = min(run_once(many)[0] for _ in range(repeats))
+    n = len(jobs)
+    return {
+        "kind": "multidevice",
+        "devices": ndev,
+        "mix": mix,
+        "batch": batch,
+        "jobs": n,
+        "one_device_s": round(one_s, 4),
+        "sharded_s": round(many_s, 4),
+        "jobs_per_sec_1dev": round(n / one_s, 1),
+        "jobs_per_sec_ndev": round(n / many_s, 1),
+        "scaling": round(one_s / many_s, 2),
+        "verified_bit_identical": len(jobs) if verify else 0,
+    }
+
+
+def multidevice_smoke(batch: int = 16, rounds: int = 2) -> None:
+    """CI gate (runs under ``--xla_force_host_platform_device_count=4``):
+    the sharded fleet must be bit-identical to the 1-device scheduler
+    and, with >1 device backed by distinct host cores, faster.  On a
+    single-core runner the devices time-share one core, so only the
+    identity (and a sanity floor on the slowdown) is gated; the scaling
+    ratio is still printed and recorded for the trend line."""
+    import jax
+
+    cfg = fleet_config()
+    row = bench_multidevice(cfg, batch=batch, rounds=rounds, mix="light")
+    ndev = row["devices"]
+    cores = os.cpu_count() or 1
+    print(f"multidevice-smoke: {ndev} device(s) on {cores} core(s), "
+          f"{row['jobs']} jobs, 1-dev {row['jobs_per_sec_1dev']} jobs/s, "
+          f"{ndev}-dev {row['jobs_per_sec_ndev']} jobs/s, "
+          f"scaling {row['scaling']}x (bit-identical "
+          f"{row['verified_bit_identical']})")
+    assert ndev == len(jax.devices())
+    if ndev > 1 and cores >= 2 * ndev:
+        # real parallel hardware: demand measurable scaling
+        assert row["scaling"] >= 1.3, \
+            f"expected >=1.3x on {ndev} devices, got {row['scaling']}x"
+    else:
+        # time-shared virtual devices: sharding must not collapse
+        assert row["scaling"] >= 0.25, \
+            f"sharded drain collapsed: {row['scaling']}x"
+
+
 def _chaos_plan(seed: int = 11) -> FaultPlan:
     """The benchmark's fixed chaos schedule — three fault kinds: tier
     compile failure (degrades down the tier chain), dispatch exceptions
@@ -436,6 +524,9 @@ def bench(batch: int = 32, rounds: int = 8, repeats: int = 2,
             for m in mixes]
     rows.append(bench_residency(cfg, batch))
     rows.extend(bench_serve(cfg, batch))
+    import jax
+    if len(jax.devices()) > 1:
+        rows.append(bench_multidevice(cfg, batch, verify=verify))
     return rows
 
 
@@ -454,6 +545,13 @@ def main() -> None:
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="CI gate: seeded chaos run, every future "
                          "resolves, results bit-identical")
+    ap.add_argument("--multidevice-smoke", action="store_true",
+                    help="CI gate: sharded fleet bit-identical to the "
+                         "1-device scheduler (scaling gated only on "
+                         "real parallel hardware)")
+    ap.add_argument("--multidevice", action="store_true",
+                    help="measure only the multi-device row and merge "
+                         "it into the json (other rows untouched)")
     ap.add_argument("--blackbox-dir", default=None, metavar="DIR",
                     help="where chaos-run flight-recorder dumps land "
                          "(CI uploads them as artifacts)")
@@ -465,6 +563,26 @@ def main() -> None:
 
     if args.serve_smoke:
         serve_smoke()
+        return
+    if args.multidevice_smoke:
+        multidevice_smoke()
+        return
+    if args.multidevice:
+        row = bench_multidevice(fleet_config(), args.batch)
+        print(f"fleet/multidevice_{row['mix']}_n{row['devices']},"
+              f"{1e6 * row['sharded_s'] / row['jobs']:.1f},"
+              f"jobs_per_sec={row['jobs_per_sec_ndev']};"
+              f"scaling={row['scaling']}x")
+        rows = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                rows = json.load(f)
+        rows = [r for r in rows if r.get("kind") != "multidevice"]
+        rows.append(row)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# merged multidevice row into {args.json}",
+              file=sys.stderr)
         return
     if args.chaos_smoke:
         if args.blackbox_dir:
@@ -483,6 +601,12 @@ def main() -> None:
         print(f"# wrote trace {args.trace}", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
+        if r.get("kind") == "multidevice":
+            print(f"fleet/multidevice_{r['mix']}_n{r['devices']},"
+                  f"{1e6 * r['sharded_s'] / r['jobs']:.1f},"
+                  f"jobs_per_sec={r['jobs_per_sec_ndev']};"
+                  f"scaling={r['scaling']}x")
+            continue
         if r.get("kind") == "serve":
             print(f"fleet/serve_{r['mode']}_{int(r['rate_jobs_per_sec'])},"
                   f"{r['p50_ms'] * 1e3:.1f},"

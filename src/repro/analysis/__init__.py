@@ -15,8 +15,23 @@ is fully decidable at submit time.  This package exploits that:
 * ``python -m repro.analysis.lint`` — renders diagnostics for one
   program or the whole in-repo suite.
 
-The fleet admission path (`repro.fleet.scheduler.check_job`) rejects
-ERROR-level programs before any compile.
+Invariants the rest of the stack builds on (see
+``docs/architecture.md``):
+
+* **ERROR rejects pre-compile** — ``Fleet.submit`` /
+  ``FleetService.submit`` run :func:`analyze_cached` and raise
+  (:class:`ProgramVerificationError` / ``JobError(kind="rejected")``)
+  before any compile, queue slot or device work is spent; WARN/INFO
+  admit;
+* **soundness over completeness** — the analyzer never calls a
+  faulting program safe (swept against the NumPy reference executor
+  in ``tests/test_analysis_soundness.py``); unprovable cases degrade
+  to WARN/INFO, never to silence;
+* **optimizer changes nothing observable** — every
+  :func:`optimize_image` transform is differentially verified
+  bit-identical in architectural end state across all three execution
+  tiers, and bails (input returned unchanged) on programs that carry
+  ERROR findings.
 """
 from .diagnostics import (AnalysisReport, Diagnostic,  # noqa: F401
                           ProgramVerificationError, Severity)

@@ -449,6 +449,59 @@ class TierPolicy:
 DEFAULT_TIER_POLICY = TierPolicy()
 
 
+#: Per-backend threshold tables consulted by
+#: :meth:`TierPolicy.for_backend`.  ``"cpu"`` is the measured default
+#: (the ``auto_tier`` sweep above).  The ``"gpu"``/``"tpu"`` seeds are
+#: *priors*, not measurements: on accelerators the block driver's
+#: ``lax.switch`` dispatch is relatively more expensive (each dispatch
+#: is a device-side branch over all traced blocks) while the
+#: superblock's fixed host-side cost is amortized by the launch, so the
+#: crossover moves earlier.  ``benchmarks/calibrate.py`` replaces a
+#: seed with a fitted table by running the same sweep on the actual
+#: backend and calling :func:`register_backend_table`.
+_TIER_TABLES: dict[str, dict[str, int | None]] = {
+    "cpu": dict(_TIER_DEFAULTS),
+    "gpu": {**_TIER_DEFAULTS, "min_backedge_dispatches": 12,
+            "min_trace_fusion": 128, "min_fori_execd": 4096},
+    "tpu": {**_TIER_DEFAULTS, "min_backedge_dispatches": 12,
+            "min_trace_fusion": 128, "min_fori_execd": 4096},
+}
+
+
+def register_backend_table(kind: str, **thresholds: int | None) -> None:
+    """Install a (typically calibration-fitted) threshold table for one
+    backend kind (``"cpu"``/``"gpu"``/``"tpu"``).  Unnamed thresholds
+    keep the module defaults.  Subsequent
+    :meth:`TierPolicy.for_backend`/:func:`default_policy_for_device`
+    calls see the new table; already-constructed policies are unchanged
+    (instances are immutable)."""
+    unknown = set(thresholds) - set(_TIER_DEFAULTS)
+    if unknown:
+        raise ValueError(
+            f"unknown TierPolicy thresholds {sorted(unknown)}; "
+            f"known: {sorted(_TIER_DEFAULTS)}")
+    _TIER_TABLES[kind] = {**_TIER_DEFAULTS, **thresholds}
+
+
+def tier_policy_for_backend(kind: str) -> TierPolicy:
+    """The :class:`TierPolicy` for a backend kind, from the registered
+    (seeded or calibrated) table; unknown kinds fall back to the CPU
+    defaults."""
+    table = _TIER_TABLES.get(kind)
+    if table is None:
+        return DEFAULT_TIER_POLICY
+    overrides = {k: v for k, v in table.items() if v != _TIER_DEFAULTS[k]}
+    return TierPolicy(**overrides) if overrides else DEFAULT_TIER_POLICY
+
+
+def default_policy_for_device(device) -> TierPolicy:
+    """Policy for a concrete jax device (``None`` -> the default
+    policy, so unpinned schedulers never touch device state)."""
+    if device is None:
+        return DEFAULT_TIER_POLICY
+    return tier_policy_for_backend(device.platform)
+
+
 class _PathRecorder:
     """Online fold of the executed path into a superblock schedule.
 
@@ -1156,17 +1209,16 @@ class CompiledProgram:
 
         return run
 
-    def _build_light_runner(self):
-        """The light path: only ``(shared, cycles, halted)`` leave the
-        device.  No input donation — the fleet's residency cache replays
-        the same device-resident shared image across drains, which a
-        donated (consumed) buffer would forbid.  On the superblock tier
-        cycles/halted are baked constants; on the blocks tier they fall
-        out of the driver loop."""
+    def light_fn(self):
+        """The *unjitted* light-path function ``(shared, tdx_dim) ->
+        (shared, cycles, halted)`` — for callers that wrap their own
+        transform around it (the sharded fleet ``shard_map``s it over
+        the 1-D job mesh; every row is an independent core, so sharding
+        the leading batch axis is bit-identical to the single-device
+        call)."""
         sim = self.sim
 
         if self.mode == "superblock":
-            @jax.jit
             def run(shared, tdx_dim):
                 batch = shared.shape[:-1]
                 _, shared_f, _, _ = self._super_final(shared, tdx_dim)
@@ -1175,7 +1227,6 @@ class CompiledProgram:
                         jnp.broadcast_to(jnp.bool_(sim.halted), batch))
             return run
 
-        @jax.jit
         def run(shared, tdx_dim):
             batch = shared.shape[:-1]
             d, s = self._blocks_final(shared, tdx_dim)
@@ -1183,6 +1234,15 @@ class CompiledProgram:
                     jnp.broadcast_to(s.cycles, batch),
                     jnp.broadcast_to(s.halted, batch))
         return run
+
+    def _build_light_runner(self):
+        """The light path: only ``(shared, cycles, halted)`` leave the
+        device.  No input donation — the fleet's residency cache replays
+        the same device-resident shared image across drains, which a
+        donated (consumed) buffer would forbid.  On the superblock tier
+        cycles/halted are baked constants; on the blocks tier they fall
+        out of the driver loop."""
+        return jax.jit(self.light_fn())
 
     # ------------------------------------------------------------- public
     def run(self, *, shared_init=None, tdx_dim: int = 16) -> MachineState:
@@ -1216,17 +1276,25 @@ class CompiledProgram:
         return out
 
     # -------------------------------------------------------- light path
-    def light_compile(self, shared, tdx_dim) -> float:
+    def light_compile(self, shared, tdx_dim, device=None) -> float:
         """Ensure the light-path executable for these input shapes is
         built and XLA-compiled ahead of time; returns the host seconds
         that took (0.0 when already compiled).  The fleet calls this
         before its timed dispatch so ``FleetStats.compile_s`` carries
-        the one-time compile cost instead of ``wall_s``."""
+        the one-time compile cost instead of ``wall_s``.
+
+        AOT executables are pinned to the devices their inputs were
+        lowered on, so ``device`` is part of the cache key: a pinned
+        fleet scheduler gets its own entry per device, and ``None``
+        (today's unpinned path) keeps the default placement."""
         shared = jnp.asarray(shared, _U32)
         tdx_dim = jnp.asarray(tdx_dim, _I32)
-        key = (np.shape(shared), np.shape(tdx_dim))
+        key = (np.shape(shared), np.shape(tdx_dim), device)
         if key in self._light_execs:
             return 0.0
+        if device is not None:
+            shared = jax.device_put(shared, device)
+            tdx_dim = jax.device_put(tdx_dim, device)
         t0 = time.perf_counter()
         with obs_trace.span("compile", kind="xla_light", tier=self.mode,
                             batch=key[0][:-1]):
@@ -1236,19 +1304,25 @@ class CompiledProgram:
                 self._light_jit.lower(shared, tdx_dim).compile()
         return time.perf_counter() - t0
 
-    def run_light_dev(self, shared, tdx_dim):
+    def run_light_dev(self, shared, tdx_dim, device=None):
         """Raw light entry: device (or host) arrays in — ``(..., S)``
         uint32 shared image, ``(...,)``/scalar int32 TDX — device arrays
         ``(shared, cycles, halted)`` out.  No host sync, no donation:
         the same input buffer can be replayed across calls, which is
         what keeps the fleet's residency cache sound.  Dispatches the
-        shape-keyed AOT executable (see :meth:`light_compile`)."""
+        shape-keyed AOT executable (see :meth:`light_compile`); when
+        ``device`` is given inputs are placed there first (a no-op for
+        already-resident buffers) and the device-keyed executable runs
+        — cross-device replay of a pinned executable is a jax error."""
         shared = jnp.asarray(shared, _U32)
         tdx_dim = jnp.asarray(tdx_dim, _I32)
-        key = (np.shape(shared), np.shape(tdx_dim))
+        if device is not None:
+            shared = jax.device_put(shared, device)
+            tdx_dim = jax.device_put(tdx_dim, device)
+        key = (np.shape(shared), np.shape(tdx_dim), device)
         exe = self._light_execs.get(key)
         if exe is None:
-            self.light_compile(shared, tdx_dim)
+            self.light_compile(shared, tdx_dim, device)
             exe = self._light_execs[key]
         return exe(shared, tdx_dim)
 

@@ -26,17 +26,21 @@ with backoff, bounded admission, deterministic fault injection):
         fut.result()                     # JobResult, or raises JobError
 """
 from .api import Fleet, run_jobs, serve_jobs
+from .devices import balance_units, device_label, fleet_devices, make_job_mesh
 from .engine import ResidencyCache, fleet_run, stack_states, unstack_state
 from .faults import FAULT_SITES, FaultPlan, FaultSpec, InjectedFault
 from .scheduler import (FleetJob, FleetScheduler, FleetStats, JobResult,
                         check_job)
 from .service import (AdmissionError, FleetService, JobError, ServiceStats,
                       register_serve_metrics)
+from .sharded import ShardedFleetScheduler
 
 __all__ = [
     "Fleet", "run_jobs", "serve_jobs", "fleet_run", "stack_states",
     "unstack_state", "FleetJob", "FleetScheduler", "FleetStats",
     "JobResult", "ResidencyCache", "check_job",
+    "ShardedFleetScheduler", "fleet_devices", "device_label",
+    "make_job_mesh", "balance_units",
     "FleetService", "ServiceStats", "JobError", "AdmissionError",
     "register_serve_metrics",
     "FaultPlan", "FaultSpec", "InjectedFault", "FAULT_SITES",

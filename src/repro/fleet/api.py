@@ -23,6 +23,7 @@ from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from .scheduler import FleetScheduler, FleetStats, JobResult
 from .service import FleetService
+from .sharded import ShardedFleetScheduler
 
 
 class Fleet:
@@ -46,6 +47,12 @@ class Fleet:
     after each drain (``python -m repro.obs.report <path>`` summarizes
     it).  Tracing never changes results — they stay bit-identical —
     and costs nothing when off.
+
+    ``devices=`` shards drains across local accelerators through
+    :class:`~repro.fleet.sharded.ShardedFleetScheduler` — ``"all"``
+    takes every visible device, an int the first N, or pass an explicit
+    device sequence.  Results stay bit-identical to the single-device
+    fleet; ``devices=None`` (default) is exactly today's scheduler.
     """
 
     def __init__(self, cfg: EGPUConfig, batch_size: int = 32, *,
@@ -54,15 +61,20 @@ class Fleet:
                  tier_policy: TierPolicy | None = None,
                  residency_max: int = 32,
                  trace: bool | str | obs_trace.Tracer | None = None,
-                 metrics: obs_metrics.MetricsRegistry | None = None):
-        self._sched = FleetScheduler(cfg, batch_size,
-                                     pack_by_cost=pack_by_cost,
-                                     validate=validate,
-                                     use_compiler=use_compiler,
-                                     compile_min=compile_min,
-                                     tier_policy=tier_policy,
-                                     residency_max=residency_max,
-                                     trace=trace, metrics=metrics)
+                 metrics: obs_metrics.MetricsRegistry | None = None,
+                 devices: Any = None):
+        kw = dict(pack_by_cost=pack_by_cost,
+                  validate=validate,
+                  use_compiler=use_compiler,
+                  compile_min=compile_min,
+                  tier_policy=tier_policy,
+                  residency_max=residency_max,
+                  trace=trace, metrics=metrics)
+        if devices is None:
+            self._sched = FleetScheduler(cfg, batch_size, **kw)
+        else:
+            self._sched = ShardedFleetScheduler(cfg, batch_size,
+                                                devices=devices, **kw)
 
     @property
     def cfg(self) -> EGPUConfig:

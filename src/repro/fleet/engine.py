@@ -42,6 +42,7 @@ from ..core.isa import Op
 from ..core.machine import MachineState, init_state
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from . import devices as devices_mod
 from . import faults
 
 
@@ -186,10 +187,12 @@ _FLEET_EXECS: OrderedDict = OrderedDict()
 _FLEET_EXECS_MAX = 64
 
 
-def _fleet_exec(runner, progs, states):
-    """The AOT executable for this (runner, shapes), plus the host
-    seconds spent compiling it now (0.0 on a cache hit)."""
-    key = (runner, progs.shape)
+def _fleet_exec(runner, progs, states, device=None):
+    """The AOT executable for this (runner, shapes, device), plus the
+    host seconds spent compiling it now (0.0 on a cache hit).  AOT
+    executables are pinned to the devices their inputs were lowered on,
+    so ``device`` (None -> default placement) is part of the key."""
+    key = (runner, progs.shape, device)
     exe = _FLEET_EXECS.get(key)
     if exe is not None:
         _FLEET_EXECS.move_to_end(key)
@@ -211,7 +214,8 @@ def fleet_run(images: list[ProgramImage],
               prog_len: int | None = None,
               init_kw: list[dict] | None = None,
               validate: bool = True,
-              timings: dict | None = None) -> MachineState:
+              timings: dict | None = None,
+              device=None) -> MachineState:
     """Execute one program per core, all cores in one vmapped dispatch.
 
     ``images`` must share a configuration (homogeneous cores).  ``states``
@@ -229,6 +233,11 @@ def fleet_run(images: list[ProgramImage],
     seconds spent XLA-compiling the runner for this batch shape during
     *this* call (0.0 when warm), so callers timing the dispatch can
     attribute one-time compile cost separately.
+
+    ``device`` pins the dispatch to one jax device: inputs are placed
+    there, the AOT executable is compiled against that placement (and
+    cached per device), and metrics/fault-site info carry its label.
+    ``None`` keeps today's default-device behavior bit-for-bit.
     """
     if not images:
         raise ValueError("empty fleet")
@@ -245,23 +254,30 @@ def fleet_run(images: list[ProgramImage],
             raise ValueError("one state per core required")
         states = stack_states(states)
     progs, length, ops = _pack_programs(images, prog_len)
+    if device is not None:
+        progs = jax.device_put(progs, device)
+        states = jax.device_put(states, device)
+    dev_label = devices_mod.device_label(device)
     runner = _make_fleet_runner(cfg, length, ops, validate=validate)
-    exe, compile_s = _fleet_exec(runner, progs, states)
+    exe, compile_s = _fleet_exec(runner, progs, states, device)
     if timings is not None:
         timings["compile_s"] = compile_s
     t_disp = time.perf_counter()
-    with obs_trace.span("dispatch", cores=len(images), prog_len=length):
-        faults.maybe_raise("dispatch", tier="interp", cores=len(images))
+    with obs_trace.span("dispatch", cores=len(images), prog_len=length,
+                        device=dev_label):
+        faults.maybe_raise("dispatch", tier="interp", cores=len(images),
+                           device=dev_label)
         out = exe(progs, states)
     t_sync = time.perf_counter()
     with obs_trace.span("device_sync"):
-        hang = faults.hang_seconds("device_sync", tier="interp")
+        hang = faults.hang_seconds("device_sync", tier="interp",
+                                   device=dev_label)
         if hang:
             time.sleep(hang)
         out.cycles.block_until_ready()
     t_done = time.perf_counter()
     obs_metrics.observe("fleet_dispatch_seconds", t_sync - t_disp,
-                        tier="interp")
+                        tier="interp", device=dev_label)
     obs_metrics.observe("fleet_device_sync_seconds", t_done - t_sync,
-                        tier="interp")
+                        tier="interp", device=dev_label)
     return out

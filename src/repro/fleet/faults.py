@@ -22,6 +22,13 @@ site                effect at the hook point
 ``salvage_corrupt`` one stashed salvaged result has a bit flipped while
                     it waits for the next drain (proves the salvage
                     path's delivery checksums catch corruption)
+``device_fail``     a whole device is declared dead at the top of a
+                    per-device dispatch: the multi-device service marks
+                    it unhealthy, its dispatcher exits, and the cohort
+                    re-enters the shared queue for the surviving
+                    devices (proves capacity — not availability — is
+                    what a dead device costs).  Pair with
+                    ``where={"device": "cpu:2"}`` to kill one device.
 =================== =====================================================
 
 Sites the plan does not mention never fault, and with no plan installed
@@ -59,7 +66,7 @@ __all__ = [
 #: every hook point the fleet stack exposes (a plan naming anything
 #: else is a typo and is rejected at construction)
 FAULT_SITES = ("compile", "dispatch", "device_sync", "residency_evict",
-               "salvage_corrupt")
+               "salvage_corrupt", "device_fail")
 
 
 class InjectedFault(RuntimeError):
@@ -133,15 +140,21 @@ class FaultPlan:
         #: every injection, in order, with the hook's info kwargs
         self.log: list[dict] = []
         self._lock = threading.Lock()
-        self._tokens: list[contextvars.Token] = []
+        # per-thread token stacks: contextvar reset tokens are only
+        # valid in the context that set them, and one plan may be
+        # entered concurrently from many dispatcher threads
+        self._tokens = threading.local()
 
     # ------------------------------------------------------ activation
     def __enter__(self) -> "FaultPlan":
-        self._tokens.append(_PLAN.set(self))
+        stack = getattr(self._tokens, "stack", None)
+        if stack is None:
+            stack = self._tokens.stack = []
+        stack.append(_PLAN.set(self))
         return self
 
     def __exit__(self, *exc) -> bool:
-        _PLAN.reset(self._tokens.pop())
+        _PLAN.reset(self._tokens.stack.pop())
         return False
 
     # ----------------------------------------------------------- hooks

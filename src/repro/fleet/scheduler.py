@@ -6,6 +6,26 @@ into fixed-shape batches of ``batch_size`` cores, runs each batch in one
 vmapped XLA dispatch (:func:`repro.fleet.engine.fleet_run`) and scatters
 per-job results back by handle.
 
+Invariants the layers above build on (see ``docs/architecture.md``):
+
+* **one delivery per job** — every submitted handle appears in exactly
+  one drain's results (or, under ``drain_isolated``, in exactly one of
+  results/failures), even across drain crashes: unprocessed jobs
+  re-queue, computed results stash and deliver next drain;
+* **checksummed salvage** — a result stashed across a failed drain is
+  content-checksummed when stashed and re-verified at delivery; a
+  corrupted result is dropped and its job re-executed, never served;
+* **bit-identical tiers** — a job's architectural outputs (shared
+  image, cycles, steps) are identical whichever tier runs it, so tier
+  choice, degradation and bisection are pure performance decisions;
+* **admission lint precedes compile** — ``submit`` rejects
+  statically-broken programs (``ProgramVerificationError``) before any
+  compile or dispatch sees them;
+* **device pinning is optional** — ``device=None`` (the default) is
+  today's single-device scheduler, bit-for-bit; a pinned scheduler
+  places inputs, AOT executables and metrics on/for its device, which
+  is what the multi-device fleet (``fleet/sharded.py``) composes.
+
 Packing rules:
 
 * programs are padded to the shared ``_PAD`` grid (the executor's
@@ -30,6 +50,7 @@ import hashlib
 import time
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,7 +59,8 @@ from ..core import isa
 from ..core import machine as machine_mod
 from ..core.assembler import Asm, ProgramImage
 from ..core.blockc import (BlockCompileError, TierPolicy, compile_program,
-                           normalize_threads, program_key)
+                           default_policy_for_device, normalize_threads,
+                           program_key)
 from ..core.config import EGPUConfig
 from ..core.executor import padded_length
 from ..core.machine import MachineState
@@ -48,6 +70,7 @@ from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from ..obs.counters import EventCounters
 from . import faults
+from .devices import device_label
 from .engine import ResidencyCache, fleet_run
 
 
@@ -329,6 +352,25 @@ class FleetStats:
         wall = self.wall_s
         return self.jobs / wall if wall else 0.0
 
+    def per_device(self) -> dict[str, dict[str, int]]:
+        """``{device_label: {"jobs": ..., "batches": ...}}`` across
+        every device this registry has seen.  An unpinned scheduler
+        reports under ``"default"``; the megabatch ``shard_map`` path
+        reports under ``"mesh"`` (the dispatch spans every mesh
+        device, so per-device attribution would be a lie)."""
+        snap = self.registry.snapshot()
+        out: dict[str, dict[str, int]] = {}
+        for name, field in (("fleet_jobs_total", "jobs"),
+                            ("fleet_batches_total", "batches")):
+            m = snap._metric(name)
+            if m is None:
+                continue
+            for s in m["samples"]:
+                dev = s["labels"].get("device", "default")
+                out.setdefault(dev, {"jobs": 0, "batches": 0})
+                out[dev][field] += int(round(s["value"]))
+        return out
+
     def __repr__(self) -> str:
         return (f"FleetStats(jobs={self.jobs}, batches={self.batches}, "
                 f"wall_s={self.wall_s:.4f}, "
@@ -341,11 +383,11 @@ def register_fleet_metrics(reg: obs_metrics.MetricsRegistry) -> None:
     """Declare the fleet-layer metric families (idempotent) so help
     text and label sets exist even before the first increment."""
     reg.counter("fleet_jobs_total",
-                "jobs executed, by tier and program digest",
-                ("tier", "program"))
+                "jobs executed, by tier, program digest and device",
+                ("tier", "program", "device"))
     reg.counter("fleet_batches_total",
-                "batches dispatched, by tier and program digest",
-                ("tier", "program"))
+                "batches dispatched, by tier, program digest and device",
+                ("tier", "program", "device"))
     reg.counter("fleet_pad_slots_total", "filler lanes padded in")
     reg.counter("fleet_cycles_total", "architectural cycles retired")
     reg.counter("fleet_steps_total", "instructions executed")
@@ -368,10 +410,10 @@ def register_fleet_metrics(reg: obs_metrics.MetricsRegistry) -> None:
                 "failing batches bisected by the isolated drain")
     reg.histogram("fleet_dispatch_seconds",
                   "XLA dispatch wall per compiled-tier batch",
-                  ("tier",))
+                  ("tier", "device"))
     reg.histogram("fleet_device_sync_seconds",
                   "device sync wall per compiled-tier batch",
-                  ("tier",))
+                  ("tier", "device"))
 
 
 def _batch_init_state(cfg: EGPUConfig, jobs: list[FleetJob]) -> MachineState:
@@ -450,7 +492,8 @@ class FleetScheduler:
                  tier_policy: TierPolicy | None = None,
                  residency_max: int = 32, fixed_bucket: bool = False,
                  trace: bool | str | obs_trace.Tracer | None = None,
-                 metrics: obs_metrics.MetricsRegistry | None = None):
+                 metrics: obs_metrics.MetricsRegistry | None = None,
+                 device=None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         #: ``trace=True`` records every drain into ``self.tracer``;
@@ -473,6 +516,19 @@ class FleetScheduler:
         self.validate = validate
         self.use_compiler = use_compiler
         self.compile_min = compile_min
+        #: ``device=`` pins every dispatch (interpreter and compiled
+        #: tier) to one jax device: inputs are placed there, AOT
+        #: executables compile against (and cache per) that placement,
+        #: and metrics/fault-site info carry the device label.  ``None``
+        #: — the default — is today's unpinned single-device scheduler,
+        #: bit-for-bit.  A pinned scheduler with no explicit
+        #: ``tier_policy`` also picks the policy table registered for
+        #: its device's backend kind (see
+        #: :func:`repro.core.blockc.default_policy_for_device`).
+        self.device = device
+        self._dev = device_label(device)
+        if tier_policy is None and device is not None:
+            tier_policy = default_policy_for_device(device)
         self.tier_policy = tier_policy
         #: pad every compiled-tier unit to the full ``batch_size`` lanes
         #: instead of the next power of two.  Pow2 bucketing minimizes
@@ -687,8 +743,10 @@ class FleetScheduler:
             sum_steps += res.steps
         # one registry pass per batch, not per job (hot path)
         m = self._m
-        m.inc("fleet_batches_total", tier="interp", program="mixed")
-        m.inc("fleet_jobs_total", real, tier="interp", program="mixed")
+        m.inc("fleet_batches_total", tier="interp", program="mixed",
+              device=self._dev)
+        m.inc("fleet_jobs_total", real, tier="interp", program="mixed",
+              device=self._dev)
         m.inc("fleet_pad_slots_total", len(batch) - real)
         m.inc("fleet_wall_seconds_total", wall)
         m.inc("fleet_cycles_total", sum_cycles)
@@ -753,7 +811,13 @@ class FleetScheduler:
                 buf = machine_mod.pack_shared_init(j.shared_init, S)
                 shared[i, :buf.size] = buf
             tdx = np.asarray([j.tdx_dim for j in chunk], np.int32)
-            return jnp.asarray(shared), jnp.asarray(tdx)
+            sh_dev, tdx_dev = jnp.asarray(shared), jnp.asarray(tdx)
+            if self.device is not None:
+                # commit to the pinned device now, so the resident
+                # entry replays with zero cross-device movement
+                sh_dev = jax.device_put(sh_dev, self.device)
+                tdx_dev = jax.device_put(tdx_dev, self.device)
+            return sh_dev, tdx_dev
 
         if faults.fire("residency_evict") is not None:
             self._residency.clear()      # must be a miss, never an error
@@ -793,8 +857,10 @@ class FleetScheduler:
         # one registry pass per batch, not per job (hot path)
         prog = _prog_digest(cp.image)
         m = self._m
-        m.inc("fleet_batches_total", tier=cp.mode, program=prog)
-        m.inc("fleet_jobs_total", real, tier=cp.mode, program=prog)
+        m.inc("fleet_batches_total", tier=cp.mode, program=prog,
+              device=self._dev)
+        m.inc("fleet_jobs_total", real, tier=cp.mode, program=prog,
+              device=self._dev)
         m.inc("fleet_pad_slots_total", len(batch) - real)
         m.inc("fleet_wall_seconds_total", wall)
         m.inc("fleet_cycles_total", cycles * real)
@@ -818,25 +884,31 @@ class FleetScheduler:
             if rsp.active:
                 rsp.set(hit=res_hit)
             # split one-time XLA compilation out of the timed dispatch
-            compile_s = cp.light_compile(shared_dev, tdx_dev)
+            compile_s = cp.light_compile(shared_dev, tdx_dev, self.device)
             self._m.inc("fleet_compile_seconds_total", compile_s)
             self._m.inc("fleet_compile_cache_total",
                         result="miss" if compile_s else "hit")
             t_disp = time.perf_counter()
-            with obs_trace.span("dispatch", cores=size):
-                faults.maybe_raise("dispatch", tier=cp.mode, cores=size)
-                shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev)
+            with obs_trace.span("dispatch", cores=size,
+                                device=self._dev):
+                faults.maybe_raise("dispatch", tier=cp.mode, cores=size,
+                                   device=self._dev)
+                shared_out, _, _ = cp.run_light_dev(shared_dev, tdx_dev,
+                                                    self.device)
             t_sync = time.perf_counter()
             with obs_trace.span("device_sync"):
-                hang = faults.hang_seconds("device_sync", tier=cp.mode)
+                hang = faults.hang_seconds("device_sync", tier=cp.mode,
+                                           device=self._dev)
                 if hang:
                     time.sleep(hang)
                 shared_out.block_until_ready()
             t_done = time.perf_counter()
             self._m.observe("fleet_dispatch_seconds",
-                            t_sync - t_disp, tier=cp.mode)
+                            t_sync - t_disp, tier=cp.mode,
+                            device=self._dev)
             self._m.observe("fleet_device_sync_seconds",
-                            t_done - t_sync, tier=cp.mode)
+                            t_done - t_sync, tier=cp.mode,
+                            device=self._dev)
             wall = time.perf_counter() - t0 - compile_s
             with obs_trace.span("collect"):
                 self._collect_light(cp, shared_out, chunk, real, wall,
@@ -854,7 +926,8 @@ class FleetScheduler:
                 states = _batch_init_state(self.cfg, batch)
             timings: dict = {}
             final = fleet_run([j.image for j in batch], states,
-                              validate=self.validate, timings=timings)
+                              validate=self.validate, timings=timings,
+                              device=self.device)
             # one-time XLA compile cost, split out of execution wall
             self._m.inc("fleet_compile_seconds_total",
                         timings["compile_s"])

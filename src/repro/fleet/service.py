@@ -34,7 +34,29 @@ scheduler into a stream-serving front-end:
 * **dispatch watchdog** — with ``dispatch_timeout_s`` set, a hung
   dispatch (e.g. a device sync that never returns — the
   ``device_sync`` fault site) is abandoned: the scheduler is replaced
-  wholesale and the cohort is retried/failed as timeouts.
+  wholesale and the cohort is retried/failed as timeouts;
+* **per-device dispatchers** — with ``devices=`` set, every device gets
+  its own dispatcher thread and pinned scheduler, all fed from the ONE
+  shared admission queue (work-stealing: whichever device is free takes
+  the next ready cohort).  Watchdogs and scheduler resets are
+  per-device, so a hung device costs capacity, not availability; a
+  device that keeps failing (``device_unhealthy_after`` consecutive
+  cohorts, or the ``device_fail`` fault site) is marked unhealthy and
+  its dispatcher retires — its queued work migrates to the survivors.
+  ``devices=None`` (default) is exactly the single-dispatcher service.
+
+Invariants (see ``docs/architecture.md``):
+
+* **every future resolves** — with a :class:`~repro.fleet.scheduler.
+  JobResult` or a :class:`JobError`; never dropped, whatever faults,
+  hangs, resets or device deaths occur;
+* **one delivery per job** — a ticket resolves exactly once; retries
+  re-enqueue the same ticket, never clone it;
+* **ERROR rejects pre-compile** — the static verifier runs at
+  ``submit`` and broken programs fail there (``kind="rejected"``),
+  before any compile or device work;
+* **overload degrades, never grows** — admission is bounded by cost
+  budget / queue depth; shedding is explicit (block or reject).
 
 Failure injection for all of the above is
 :class:`repro.fleet.faults.FaultPlan` — pass one as ``faults=`` (or
@@ -62,6 +84,7 @@ from ..obs import metrics as obs_metrics
 from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from . import faults as faults_mod
+from .devices import device_label, fleet_devices
 from .scheduler import FleetScheduler, JobResult, check_job
 
 __all__ = ["FleetService", "ServiceStats", "JobError", "AdmissionError",
@@ -143,13 +166,16 @@ def register_serve_metrics(reg: obs_metrics.MetricsRegistry,
     reg.counter("serve_retries_total",
                 "re-queues after a failed attempt", ("kind",))
     reg.counter("serve_dispatches_total",
-                "cohorts handed to the scheduler")
+                "cohorts handed to a scheduler, by device", ("device",))
     reg.counter("serve_dispatched_jobs_total",
                 "jobs across all dispatched cohorts")
     reg.counter("serve_scheduler_resets_total",
-                "schedulers abandoned (hang/crash)", ("reason",))
+                "schedulers abandoned (hang/crash)",
+                ("reason", "device"))
     reg.counter("serve_watchdog_jobs_total",
                 "jobs in cohorts abandoned by the dispatch watchdog")
+    reg.gauge("serve_device_unhealthy",
+              "1 when the device's dispatcher has retired", ("device",))
     reg.counter("serve_faults_injected_total",
                 "FaultPlan injections observed", ("fault_site",))
     reg.gauge("serve_queue_depth", "jobs queued, not yet dispatched")
@@ -292,11 +318,15 @@ class FleetService:
                  blackbox_dir: str | None = None,
                  slo_latency_s: float | None = None,
                  slo_target: float = 0.99,
-                 slo_window_s: float = 60.0):
+                 slo_window_s: float = 60.0,
+                 devices: Any = None,
+                 device_unhealthy_after: int = 3):
         if admission not in ("block", "reject"):
             raise ValueError("admission must be 'block' or 'reject'")
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if device_unhealthy_after < 1:
+            raise ValueError("device_unhealthy_after must be >= 1")
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_delay_s = max_delay_s
@@ -360,7 +390,19 @@ class FleetService:
                               residency_max=residency_max,
                               fixed_bucket=fixed_bucket,
                               metrics=self.metrics)
-        self._sched = self._make_sched()
+        #: ``devices=None`` keeps the single unpinned dispatcher
+        #: (today's service, bit-for-bit); anything else resolves via
+        #: :func:`~repro.fleet.devices.fleet_devices` to one pinned
+        #: dispatcher + scheduler per device, all fed from the shared
+        #: admission queue
+        self._devices: tuple = ((None,) if devices is None
+                                else fleet_devices(devices))
+        self._dev_labels = tuple(device_label(d) for d in self._devices)
+        self.device_unhealthy_after = device_unhealthy_after
+        self._scheds = [self._make_sched(i)
+                        for i in range(len(self._devices))]
+        self._fail_streak = [0] * len(self._devices)
+        self._dead: set[int] = set()
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -370,14 +412,39 @@ class FleetService:
         self._next_tid = 0
         self._closed = False
         self._abandoned: list[threading.Thread] = []
-        self._thread = threading.Thread(target=self._loop,
-                                        name="fleet-service-dispatch",
-                                        daemon=True)
-        self._thread.start()
+        if self._tm:
+            for lbl in self._dev_labels:
+                self.metrics.set_gauge("serve_device_unhealthy", 0,
+                                       device=lbl)
+        self._threads = [
+            threading.Thread(target=self._loop, args=(i,),
+                             name=f"fleet-service-dispatch-{lbl}",
+                             daemon=True)
+            for i, lbl in enumerate(self._dev_labels)]
+        for th in self._threads:
+            th.start()
 
-    def _make_sched(self) -> FleetScheduler:
+    def _make_sched(self, idx: int = 0) -> FleetScheduler:
         return FleetScheduler(self.cfg, self.batch_size,
-                              trace=self.tracer, **self._sched_kw)
+                              trace=self.tracer,
+                              device=self._devices[idx],
+                              **self._sched_kw)
+
+    @property
+    def _sched(self) -> FleetScheduler:
+        """The first dispatcher's scheduler (single-device compat)."""
+        return self._scheds[0]
+
+    @property
+    def n_devices(self) -> int:
+        return len(self._devices)
+
+    @property
+    def healthy_devices(self) -> tuple[str, ...]:
+        """Labels of devices whose dispatchers are still serving."""
+        with self._lock:
+            return tuple(lbl for i, lbl in enumerate(self._dev_labels)
+                         if i not in self._dead)
 
     def _event(self, name: str, cat: str = "serve", **args) -> None:
         """A serving event: into the flight recorder (always on) and
@@ -484,7 +551,7 @@ class FleetService:
         return t.future
 
     # ------------------------------------------------------- dispatcher
-    def _loop(self) -> None:
+    def _loop(self, idx: int) -> None:
         with contextlib.ExitStack() as stack:
             # a fresh thread has a fresh context: install the service's
             # tracer, fault plan, flight recorder and metrics registry
@@ -500,6 +567,8 @@ class FleetService:
             while True:
                 expired, cohort = [], []
                 with self._work:
+                    if idx in self._dead:
+                        break            # retired: survivors take over
                     if self._closed and not self._queue:
                         break
                     now = time.monotonic()
@@ -541,7 +610,7 @@ class FleetService:
                     self._fail(t, "deadline",
                                detail="deadline passed before dispatch")
                 if cohort:
-                    self._dispatch(cohort)
+                    self._dispatch(cohort, idx)
 
     def _next_wake(self, now: float) -> float | None:
         """Seconds until the next scheduled trigger (batch-delay expiry,
@@ -557,18 +626,32 @@ class FleetService:
             return None
         return max(1e-4, nxt - now)
 
-    def _dispatch(self, cohort: list[_Ticket]) -> None:
+    def _dispatch(self, cohort: list[_Ticket], idx: int = 0) -> None:
         m = self.metrics
-        m.inc("serve_dispatches_total")
+        label = self._dev_labels[idx]
+        if idx in self._dead:
+            # killed between cohort formation and dispatch: hand the
+            # cohort back untouched for a surviving device
+            self._requeue_cohort(cohort)
+            return
+        if faults_mod.fire("device_fail", device=label) is not None:
+            # whole-device death: the dispatcher retires and the cohort
+            # re-enters the shared queue *without consuming an attempt*
+            # — a dead device is capacity lost, not jobs failed
+            if self._kill_device(idx, "device_fail"):
+                self._requeue_cohort(cohort)
+                return
+            # refused: last healthy device keeps serving
+        m.inc("serve_dispatches_total", device=label)
         m.inc("serve_dispatched_jobs_total", len(cohort))
         now = time.monotonic()
         if self._tm:
             m.observe("serve_cohort_size", len(cohort))
             self._event("dispatch", jobs=len(cohort),
-                        queued=self.pending)
+                        queued=self.pending, device=label)
         for t in cohort:
             t.dispatch_t = now
-        sched = self._sched
+        sched = self._scheds[idx]
         try:
             handle2t = {
                 sched.submit(t.image, t.shared_init, threads=t.threads,
@@ -580,23 +663,71 @@ class FleetService:
             # the scheduler itself misbehaved (not a contained per-unit
             # failure): abandon it — its internal queue may still hold
             # re-queued jobs — and retry the cohort on a fresh one
-            self._reset_sched("drain_error", e)
+            self._reset_sched(idx, "drain_error", e)
+            self._note_device_failure(idx)
             for t in cohort:
                 self._retry_or_fail(t, "error", e)
             return
         if out is None:                  # watchdog fired: hung dispatch
-            self._reset_sched("dispatch_timeout", None,
+            self._reset_sched(idx, "dispatch_timeout", None,
                               jobs=len(cohort))
             self.metrics.inc("serve_watchdog_jobs_total", len(cohort))
+            self._note_device_failure(idx)
             for t in cohort:
                 self._retry_or_fail(t, "timeout", None)
             return
+        self._fail_streak[idx] = 0
         results, failures = out
         for h, t in handle2t.items():
             if h in results:
                 self._complete(t, results[h])
             else:
                 self._retry_or_fail(t, "error", failures.get(h))
+
+    def _requeue_cohort(self, cohort: list[_Ticket]) -> None:
+        """Return an undispatched cohort to the shared queue untouched:
+        a device death is not the jobs' fault, so no attempt is consumed
+        and no backoff applies (the jobs' deadlines still do)."""
+        now = time.monotonic()
+        with self._work:
+            for t in cohort:
+                self._inflight_cost -= t.cost
+                self._pending_cost += t.cost
+                t.enqueue_t = now
+                self._queue.append(t)
+            self._update_gauges()
+            self._work.notify_all()
+
+    def _note_device_failure(self, idx: int) -> None:
+        """One more consecutive cohort failure on this device; at
+        ``device_unhealthy_after`` in a row the device is retired (its
+        jobs were already re-queued/retried by the caller)."""
+        self._fail_streak[idx] += 1
+        if self._fail_streak[idx] >= self.device_unhealthy_after:
+            self._kill_device(idx, "unhealthy")
+
+    def _kill_device(self, idx: int, why: str) -> bool:
+        """Mark device ``idx`` unhealthy and retire its dispatcher.
+        Refuses (returns False) when it is the last healthy device —
+        degraded capacity must never become zero availability."""
+        with self._work:
+            if idx in self._dead:
+                return True
+            if all(i in self._dead or i == idx
+                   for i in range(len(self._devices))):
+                return False
+            self._dead.add(idx)
+            self._work.notify_all()
+        label = self._dev_labels[idx]
+        if self._tm:
+            self.metrics.set_gauge("serve_device_unhealthy", 1,
+                                   device=label)
+        self._event("device_unhealthy", device=label, reason=why)
+        if self.recorder is not None:
+            path = self.recorder.dump(f"device_{why}", device=label)
+            if path is not None:
+                self.stats.blackbox_path = path
+        return True
 
     def _drain(self, sched: FleetScheduler):
         """``drain_isolated`` with the watchdog: returns ``(results,
@@ -626,11 +757,13 @@ class FleetService:
             raise box["err"]
         return box["out"]
 
-    def _reset_sched(self, why: str, err: Exception | None,
+    def _reset_sched(self, idx: int, why: str, err: Exception | None,
                      **info) -> None:
-        self.metrics.inc("serve_scheduler_resets_total", reason=why)
+        label = self._dev_labels[idx]
+        self.metrics.inc("serve_scheduler_resets_total", reason=why,
+                         device=label)
         self._event(why, error=type(err).__name__ if err else "",
-                    **info)
+                    device=label, **info)
         # the blackbox: the ring's last ~N events are exactly the
         # context a post-mortem of a hung/crashed scheduler needs
         if self.recorder is not None:
@@ -638,7 +771,7 @@ class FleetService:
                 why, error=type(err).__name__ if err else "", **info)
             if path is not None:
                 self.stats.blackbox_path = path
-        self._sched = self._make_sched()
+        self._scheds[idx] = self._make_sched(idx)
 
     # ------------------------------------------------------- resolution
     def _release(self, t: _Ticket) -> None:
@@ -732,7 +865,8 @@ class FleetService:
             self._work.notify_all()
         for t in dropped:
             self._fail(t, "shutdown", detail="service closed")
-        self._thread.join(timeout)
+        for th in self._threads:
+            th.join(timeout)
         # give watchdog-abandoned drains a bounded chance to finish so
         # the interpreter doesn't tear down under a live XLA dispatch (a
         # truly wedged one stays a daemon and is dropped with the

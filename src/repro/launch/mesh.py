@@ -7,6 +7,8 @@ jax import, and everything else must see the real device count.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 #: TPU v5e hardware constants (per chip) — used by the roofline analysis.
@@ -15,14 +17,30 @@ HBM_BW = 819e9                    # B/s
 ICI_BW = 50e9                     # B/s per link
 
 
+def _require_devices(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Fail a mesh request that oversubscribes the visible devices with
+    an actionable message (``jax.make_mesh`` would raise an opaque
+    reshape error deep inside sharding internals)."""
+    need = math.prod(shape)
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but "
+            f"only {have} are visible; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(set BEFORE jax is imported) or shrink the mesh")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    _require_devices(shape, axes)
     return jax.make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many local devices exist (tests)."""
+    _require_devices((data, model), ("data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
 
 

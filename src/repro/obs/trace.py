@@ -130,15 +130,21 @@ class Tracer:
         self._events: list[dict] = []
         self._tids: dict[int, int] = {}
         self.counters: dict[str, int] = {}
-        self._tokens: list[contextvars.Token] = []
+        # per-thread token stacks: contextvar reset tokens are only
+        # valid in the context that set them, and one tracer may be
+        # entered concurrently from many dispatcher threads
+        self._tokens = threading.local()
 
     # ------------------------------------------------------ activation
     def __enter__(self):
-        self._tokens.append(_TRACER.set(self))
+        stack = getattr(self._tokens, "stack", None)
+        if stack is None:
+            stack = self._tokens.stack = []
+        stack.append(_TRACER.set(self))
         return self
 
     def __exit__(self, *exc):
-        _TRACER.reset(self._tokens.pop())
+        _TRACER.reset(self._tokens.stack.pop())
         return False
 
     # --------------------------------------------------------- recording

@@ -170,11 +170,11 @@ def test_drain_requeues_jobs_when_compiled_batch_raises(monkeypatch):
     calls = {"n": 0}
     real_run_light = CompiledProgram.run_light_dev
 
-    def failing_run_light(self, shared, tdx_dims):
+    def failing_run_light(self, shared, tdx_dims, device=None):
         calls["n"] += 1
         if calls["n"] == 2:                 # second batch of the drain
             raise RuntimeError("injected batch failure")
-        return real_run_light(self, shared, tdx_dims)
+        return real_run_light(self, shared, tdx_dims, device)
 
     monkeypatch.setattr(CompiledProgram, "run_light_dev", failing_run_light)
     with pytest.raises(RuntimeError, match="injected"):
@@ -390,11 +390,11 @@ def test_stats_consistent_after_failed_then_salvaged_drain(monkeypatch):
     calls = {"n": 0}
     real = CompiledProgram.run_light_dev
 
-    def failing2(self, shared, tdx):
+    def failing2(self, shared, tdx, device=None):
         calls["n"] += 1
         if calls["n"] in (2, 4):
             raise RuntimeError("injected")
-        return real(self, shared, tdx)
+        return real(self, shared, tdx, device)
 
     monkeypatch.setattr(CompiledProgram, "run_light_dev", failing2)
     with pytest.raises(RuntimeError):

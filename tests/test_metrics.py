@@ -450,8 +450,8 @@ def test_chaos_watchdog_reset_produces_loadable_blackbox(tmp_path):
     assert snap.total("serve_scheduler_resets_total") == 1
     assert snap.total("serve_watchdog_jobs_total") == 4
     text = snap.to_prometheus()
-    assert 'serve_scheduler_resets_total{reason="dispatch_timeout"} 1' \
-        in text
+    assert ('serve_scheduler_resets_total'
+            '{device="default",reason="dispatch_timeout"} 1') in text
     assert snap.meta["slo"]["burn"] >= 0.0
 
 

@@ -1,0 +1,307 @@
+"""Multi-device fleet tests: sharded scheduling vs the 1-device engine.
+
+The contract under test (see docs/architecture.md): sharding the job
+stream across devices is a *placement* decision, never a *results*
+decision — the sharded scheduler is bit-identical to the single-device
+scheduler on every tier, on one device or many; a dead device costs
+capacity, never availability, and never a job.
+
+The single-device degenerate cases run everywhere.  The genuinely
+multi-device cases need >1 visible device — the ``multi-device`` CI job
+provides 4 via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+— and skip elsewhere.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EGPUConfig, run_program
+from repro.core import machine as machine_mod
+from repro.core.blockc import (DEFAULT_TIER_POLICY, TierPolicy,
+                               default_policy_for_device,
+                               tier_policy_for_backend)
+from repro.fleet import (FaultPlan, FleetScheduler, FleetService,
+                         ShardedFleetScheduler, balance_units,
+                         device_label, fleet_devices)
+from repro.programs import (build_bitonic, build_fft, build_matmul,
+                            build_reduction, build_transpose)
+
+CFG = EGPUConfig(max_threads=64, regs_per_thread=32, shared_kb=4,
+                 alu_bits=32, shift_bits=32, predicate_levels=4,
+                 has_dot=True, has_invsqr=True)
+
+NDEV = len(jax.devices())
+multi = pytest.mark.skipif(
+    NDEV < 2, reason="needs >1 device "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+_FORCE_BLOCKS = TierPolicy(batch_superblock_min=10**9,
+                           min_backedge_dispatches=10**9,
+                           min_trace_fusion=10**9,
+                           min_fori_execd=10**9)
+
+TIERS = [
+    ("interp", {"use_compiler": False}),
+    ("blocks", {"tier_policy": _FORCE_BLOCKS}),
+    ("superblock", {}),
+]
+
+
+def _suite():
+    return [
+        build_reduction(CFG, 32),
+        build_reduction(CFG, 32, use_dot=True),
+        build_reduction(CFG, 64),
+        build_transpose(CFG, 16),
+        build_matmul(CFG, 16),
+        build_bitonic(CFG, 32),
+        build_fft(CFG, 32),
+    ]
+
+
+def _run(sched, jobs):
+    hs = [sched.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim,
+                       tag=b.name) for b in jobs]
+    rs = sched.drain()
+    return [rs[h] for h in hs]
+
+
+def _assert_identical(a, b, names):
+    for ra, rb, name in zip(a, b, names):
+        assert np.array_equal(ra.shared_u32(), rb.shared_u32()), name
+        assert ra.cycles == rb.cycles, name
+        assert ra.steps == rb.steps, name
+
+
+# ---------------------------------------------------------------------------
+# degenerate single-device path: must be bit-identical everywhere
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier,kw", TIERS, ids=[t for t, _ in TIERS])
+def test_one_device_mesh_bit_identical_per_tier(tier, kw):
+    """ShardedFleetScheduler on a 1-device mesh == FleetScheduler, for
+    the full suite, on every execution tier."""
+    suite = _suite()
+    jobs = [suite[i % len(suite)] for i in range(14)]
+    base = _run(FleetScheduler(CFG, batch_size=4, **kw), jobs)
+    shard = _run(ShardedFleetScheduler(CFG, batch_size=4, devices=1,
+                                       **kw), jobs)
+    _assert_identical(base, shard, [b.name for b in jobs])
+
+
+def test_one_device_matches_sequential_reference():
+    """...and both match N independent ``run_program`` calls."""
+    suite = _suite()
+    shard = _run(ShardedFleetScheduler(CFG, batch_size=4, devices=1),
+                 suite)
+    for b, r in zip(suite, shard):
+        st = run_program(b.image, shared_init=b.shared_init,
+                         tdx_dim=b.tdx_dim)
+        assert np.array_equal(machine_mod.shared_as_u32(st),
+                              r.shared_u32()), b.name
+        assert int(st.cycles) == r.cycles, b.name
+
+
+def test_megabatch_path_one_device():
+    """Same-program runs >= one slab ride the shard_map megabatch even
+    on a 1-device mesh; results and stats labels stay correct."""
+    b = build_reduction(CFG, 32)
+    n = 4 * 3 + 2                       # 3 slabs (batch 4) + remainder
+    base = _run(FleetScheduler(CFG, batch_size=4), [b] * n)
+    sh = ShardedFleetScheduler(CFG, batch_size=4, devices=1)
+    shard = _run(sh, [b] * n)
+    _assert_identical(base, shard, [b.name] * n)
+    per = sh.stats.per_device()
+    assert per.get("mesh", {}).get("jobs", 0) == 12
+    assert sum(d["jobs"] for d in per.values()) == n
+
+
+def test_fleet_facade_devices_knob():
+    from repro.fleet import Fleet
+
+    suite = _suite()
+    plain = Fleet(CFG, batch_size=4)
+    sharded = Fleet(CFG, batch_size=4, devices=1)
+    assert isinstance(sharded._sched, ShardedFleetScheduler)
+    _assert_identical(_run(plain._sched, suite),
+                      _run(sharded._sched, suite),
+                      [b.name for b in suite])
+
+
+# ---------------------------------------------------------------------------
+# topology helpers (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_device_resolution_and_labels():
+    devs = fleet_devices("all")
+    assert len(devs) == NDEV
+    assert fleet_devices(None) == devs
+    assert fleet_devices(devs[0]) == (devs[0],)
+    assert device_label(None) == "default"
+    lbl = device_label(devs[0])
+    assert devs[0].platform in lbl and str(devs[0].id) in lbl
+
+
+def test_balance_units_lpt():
+    units = [("a", 10.0), ("b", 8.0), ("c", 2.0), ("d", 2.0),
+             ("e", 1.0), ("f", 1.0)]
+    lanes = balance_units(units, 2, cost=lambda u: u[1])
+    loads = sorted(sum(u[1] for u in lane) for lane in lanes)
+    assert loads == [12.0, 12.0]            # LPT: perfectly balanced
+    # submission order is preserved within each lane
+    order = {u: i for i, u in enumerate(units)}
+    for lane in lanes:
+        idx = [order[u] for u in lane]
+        assert idx == sorted(idx)
+    # more lanes than units: empties allowed, nothing lost
+    lanes = balance_units(units[:2], 4, cost=lambda u: u[1])
+    assert sorted(len(x) for x in lanes) == [0, 0, 1, 1]
+
+
+def test_per_backend_policy_tables():
+    assert default_policy_for_device(None) is DEFAULT_TIER_POLICY
+    assert tier_policy_for_backend("nosuch") is DEFAULT_TIER_POLICY
+    # accelerator priors move the crossover earlier, never later
+    gpu = tier_policy_for_backend("gpu")
+    assert gpu.table["min_backedge_dispatches"] \
+        <= DEFAULT_TIER_POLICY.table["min_backedge_dispatches"]
+    # a pinned scheduler derives its policy from its device's platform
+    dev = jax.devices()[0]
+    assert default_policy_for_device(dev) == \
+        tier_policy_for_backend(dev.platform)
+
+
+def test_register_backend_table_roundtrip():
+    from repro.core import blockc
+
+    saved = dict(blockc._TIER_TABLES)
+    try:
+        blockc.register_backend_table("cpu", min_backedge_dispatches=7)
+        assert tier_policy_for_backend(
+            "cpu").table["min_backedge_dispatches"] == 7
+        with pytest.raises(ValueError, match="unknown TierPolicy"):
+            blockc.register_backend_table("cpu", min_backedge=1)
+    finally:
+        blockc._TIER_TABLES.clear()
+        blockc._TIER_TABLES.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# genuinely multi-device: sharding, balancing, failover
+# ---------------------------------------------------------------------------
+
+@multi
+@pytest.mark.parametrize("tier,kw", TIERS, ids=[t for t, _ in TIERS])
+def test_all_devices_bit_identical_per_tier(tier, kw):
+    suite = _suite()
+    jobs = [suite[i % len(suite)] for i in range(4 * NDEV + 3)]
+    base = _run(FleetScheduler(CFG, batch_size=4, **kw), jobs)
+    sh = ShardedFleetScheduler(CFG, batch_size=4, devices="all", **kw)
+    shard = _run(sh, jobs)
+    _assert_identical(base, shard, [b.name for b in jobs])
+    per = sh.stats.per_device()
+    assert sum(d["jobs"] for d in per.values()) == len(jobs)
+    assert len([k for k in per if k != "mesh"]) >= 2, \
+        f"work must spread across devices: {per}"
+
+
+@multi
+def test_megabatch_shards_across_devices():
+    """A same-program run >= one slab (n_devices * batch) dispatches as
+    ONE shard_map megabatch over the whole mesh."""
+    b = build_reduction(CFG, 32)
+    sh = ShardedFleetScheduler(CFG, batch_size=4, devices="all")
+    n = sh._slab * 2 + 3
+    base = _run(FleetScheduler(CFG, batch_size=4), [b] * n)
+    shard = _run(sh, [b] * n)
+    _assert_identical(base, shard, [b.name] * n)
+    per = sh.stats.per_device()
+    assert per.get("mesh", {}).get("jobs", 0) == sh._slab * 2
+    assert per.get("mesh", {}).get("batches", 0) == 2
+
+
+@multi
+def test_sharded_repeat_drains_hit_residency():
+    """Per-device residency caches survive across sharded drains."""
+    b = build_matmul(CFG, 8)
+    sh = ShardedFleetScheduler(CFG, batch_size=4, devices="all")
+    n = sh._slab
+    _run(sh, [b] * n)
+    _run(sh, [b] * n)
+    assert sh._mega_residency.hits > 0
+
+
+@multi
+def test_device_kill_chaos_every_future_resolves():
+    """The ISSUE's acceptance chaos run: kill one whole device mid-load;
+    every future resolves, failed == 0 (a device death consumes no
+    retry attempts), and only the dead device leaves the healthy set."""
+    b = build_reduction(CFG, 32)
+    victim = device_label(jax.devices()[1])
+    plan = FaultPlan(seed=5, device_fail={"p": 1.0, "count": 1,
+                                          "where": {"device": victim}})
+    svc = FleetService(CFG, batch_size=4, max_delay_s=0.001,
+                       devices="all", faults=plan)
+    assert victim in svc._dev_labels
+    truth = run_program(b.image, shared_init=b.shared_init,
+                        tdx_dim=b.tdx_dim)
+    futs = [svc.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+            for _ in range(10 * NDEV)]
+    res = [f.result(timeout=300) for f in futs]
+    svc.close()
+    assert plan.injected["device_fail"] == 1
+    assert svc.stats.failed == 0
+    assert len(res) == 10 * NDEV
+    for r in res:
+        assert np.array_equal(machine_mod.shared_as_u32(truth),
+                              r.shared_u32())
+    healthy = svc.healthy_devices
+    assert victim not in healthy
+    assert len(healthy) == NDEV - 1
+    assert svc.metrics.total("serve_device_unhealthy",
+                             device=victim) == 1
+
+
+@multi
+def test_last_healthy_device_never_killed():
+    """A device_fail plan that matches every device can only retire
+    N-1 of them: the last healthy dispatcher refuses to die and keeps
+    serving (availability floor)."""
+    b = build_reduction(CFG, 32)
+    plan = FaultPlan(seed=9, device_fail=1.0)   # match everything
+    svc = FleetService(CFG, batch_size=4, max_delay_s=0.001,
+                       devices="all", faults=plan)
+    futs = [svc.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+            for _ in range(6 * NDEV)]
+    res = [f.result(timeout=300) for f in futs]
+    svc.close()
+    assert len(res) == 6 * NDEV
+    assert svc.stats.failed == 0
+    assert len(svc.healthy_devices) == 1
+
+
+@multi
+def test_service_multi_device_bit_identical_and_spread():
+    """Per-device dispatchers draining the shared queue: results match
+    the fault-free single-dispatcher service and more than one device
+    does work."""
+    suite = _suite()
+    jobs = [suite[i % len(suite)] for i in range(8 * NDEV)]
+
+    def serve(devices):
+        svc = FleetService(CFG, batch_size=4, max_delay_s=0.001,
+                           devices=devices)
+        futs = [svc.submit(b.image, b.shared_init, tdx_dim=b.tdx_dim)
+                for b in jobs]
+        res = [f.result(timeout=300) for f in futs]
+        svc.close()
+        return res, svc
+
+    many, svc = serve("all")
+    one, _ = serve(None)
+    _assert_identical(many, one, [b.name for b in jobs])
+    snap = svc.metrics.snapshot()
+    used = {s["labels"]["device"]
+            for s in snap._metric("serve_dispatches_total")["samples"]
+            if s["value"]}
+    assert len(used) >= 2, f"dispatches must spread: {used}"

@@ -336,11 +336,11 @@ def test_salvage_corruption_detected_and_reexecuted(monkeypatch):
     calls = {"n": 0}
     real = CompiledProgram.run_light_dev
 
-    def failing(self, shared, tdx):
+    def failing(self, shared, tdx, device=None):
         calls["n"] += 1
         if calls["n"] == 2:
             raise RuntimeError("injected batch failure")
-        return real(self, shared, tdx)
+        return real(self, shared, tdx, device)
 
     monkeypatch.setattr(CompiledProgram, "run_light_dev", failing)
     plan = FaultPlan(seed=7, salvage_corrupt=1.0)

@@ -88,3 +88,39 @@ def test_cache_specs_divisible(arch):
             jax.tree.leaves(cache)):
         assert partition.check_divisibility(leaf.shape, spec, SINGLE), \
             f"{arch}: cache {leaf.shape} vs {spec}"
+
+
+def test_mesh_oversubscription_rejected_with_recipe():
+    """Regression: ``make_debug_mesh``/``make_production_mesh`` used to
+    hand an oversubscribed shape straight to ``jax.make_mesh``, which
+    fails with an opaque reshape error deep in sharding internals.  The
+    launch helpers must reject the request up front and name the
+    ``xla_force_host_platform_device_count`` recipe."""
+    from repro.launch import mesh as mesh_mod
+
+    ndev = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        mesh_mod.make_debug_mesh(data=ndev + 1, model=1)
+    with pytest.raises(ValueError, match=f"needs {2 * ndev} devices"):
+        mesh_mod.make_debug_mesh(data=ndev, model=2)
+    if ndev < 256:
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            mesh_mod.make_production_mesh()
+    # in-budget shapes still build a real mesh
+    m = mesh_mod.make_debug_mesh(data=ndev, model=1)
+    assert mesh_mod.mesh_chips(m) == ndev
+
+
+def test_fleet_devices_oversubscription_rejected():
+    """The fleet-side device resolver shares the same contract: asking
+    for more devices than are visible is an actionable error, not an
+    IndexError."""
+    from repro.fleet import fleet_devices
+
+    ndev = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        fleet_devices(ndev + 1)
+    with pytest.raises(ValueError):
+        fleet_devices(0)
+    assert len(fleet_devices("all")) == ndev
+    assert len(fleet_devices(ndev)) == ndev
